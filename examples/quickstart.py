@@ -1,0 +1,62 @@
+"""Quickstart: the full VUSA loop in two minutes on CPU.
+
+1. train a tiny LM with iterative magnitude pruning to 85 % sparsity,
+2. pack its MLP weights into the paper's row-wise VUSA format,
+3. serve it with the packed Pallas kernel,
+4. check: identical greedy outputs, ~3x fewer weight bytes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.growth import p_grow
+from repro.serve import Engine, ServeConfig
+from repro.train import TrainConfig, Trainer, TrainHParams
+
+
+def main():
+    cfg = get_smoke_config("vusa_edge")
+    print(f"== training {cfg.name} to {cfg.sparsity:.0%} unstructured sparsity ==")
+    tc = TrainConfig(
+        steps=20,
+        global_batch=4,
+        seq_len=32,
+        prune_begin=6,
+        prune_end=16,
+        prune_every=2,
+        token_range=32,
+        hp=TrainHParams(lr=2e-3, warmup=2, total_steps=20),
+        log_every=5,
+    )
+    out = Trainer(cfg, tc).train()
+    print(f"final loss {out['final_loss']:.3f}, sparsity {out['sparsity']:.2%}")
+
+    print("\n== serving: dense vs VUSA-packed ==")
+    prompts = np.ones((2, 8), np.int32)
+    dense = Engine(cfg, out["params"], ServeConfig(max_len=64)).generate(prompts, max_new=12)
+    packed_eng = Engine(cfg, out["params"], ServeConfig(max_len=64, packed_mlp=True))
+    packed = packed_eng.generate(prompts, max_new=12)
+
+    match = (dense["tokens"] == packed["tokens"]).all()
+    print(f"greedy outputs identical: {match}")
+    assert match
+
+    total_packed = total_dense = 0
+    for name in ("w_gate", "w_up", "w_down"):
+        v = packed_eng._packed[name]["values"]
+        total_packed += v.size * (v.dtype.itemsize + 1)
+        total_dense += (
+            v.shape[0] * packed_eng._packed[name]["k"] * packed_eng._packed[name]["c"] * v.dtype.itemsize
+        )
+    print(f"MLP weight bytes: packed/dense = {total_packed / total_dense:.3f}")
+    print(
+        f"growth model check: P(row of 128 fits 16 slots @ 85% sparsity) = "
+        f"{p_grow(1, 128, 16, 0.15):.3f} (1 job almost never suffices -> expect ~2-3 jobs)"
+    )
+    print("\nquickstart OK")
+
+
+if __name__ == "__main__":
+    main()

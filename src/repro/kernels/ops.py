@@ -1,0 +1,161 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+* auto-selects interpret mode off-TPU (this container is CPU-only);
+* hosts the pack/apply glue so a model layer can swap a dense matmul for a
+  VUSA-packed one in a single call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.packing import BlockPacked, pack_blocks
+from .dense_matmul import dense_matmul
+from .ref import dense_matmul_ref, vusa_spmm_ref
+from .vusa_spmm import vusa_spmm
+
+__all__ = [
+    "on_tpu",
+    "PackedLinear",
+    "pack_linear",
+    "apply_packed",
+    "apply_packed_ref",
+    "matmul",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass
+class PackedLinear:
+    """Device-resident VUSA-packed weight (K, C) -> jobs of a_blk rows."""
+
+    values: jax.Array  # (T, J, A, Tn)
+    row_idx: jax.Array  # (T, J, A) int32
+    k: int  # logical K (pre-padding)
+    c: int  # logical C (pre-padding)
+    k_padded: int = 0
+
+    @property
+    def compression(self) -> float:
+        dense = self.k * self.c * self.values.dtype.itemsize
+        packed = self.values.size * self.values.dtype.itemsize + self.row_idx.size * 4
+        return packed / dense
+
+
+def pack_linear(
+    w: np.ndarray, m_blk: int = 32, a_blk: int = 8, tile_n: int = 128
+) -> PackedLinear:
+    """Host-side pack of a sparse (K, C) weight matrix (pads C to tile_n)."""
+    k, c = w.shape
+    w = np.asarray(w)
+    c_pad = (-c) % tile_n
+    k_pad = (-k) % m_blk
+    if c_pad or k_pad:
+        w = np.pad(w, ((0, k_pad), (0, c_pad)))
+    bp: BlockPacked = pack_blocks(w, m_blk=m_blk, a_blk=a_blk, tile_n=tile_n)
+    return PackedLinear(
+        values=jnp.asarray(bp.values),
+        row_idx=jnp.asarray(bp.row_idx),
+        k=k,
+        c=c,
+        k_padded=k + k_pad,
+    )
+
+
+def apply_packed(x: jax.Array, p: PackedLinear, *, interpret: bool | None = None) -> jax.Array:
+    """y = x @ W for packed W.  x: (..., K) -> (..., C)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    if p.k_padded > p.k:  # weight was K-padded at pack time
+        xf = jnp.pad(xf, ((0, 0), (0, p.k_padded - p.k)))
+    y = vusa_spmm(xf, p.values, p.row_idx, interpret=interp)
+    y = y[..., : p.c]
+    return y.reshape(*lead, p.c)
+
+
+def apply_packed_ref(x: jax.Array, p: PackedLinear) -> jax.Array:
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    if p.k_padded > p.k:
+        xf = jnp.pad(xf, ((0, 0), (0, p.k_padded - p.k)))
+    y = vusa_spmm_ref(xf, p.values, p.row_idx)[..., : p.c]
+    return y.reshape(*lead, p.c)
+
+
+def matmul(x: jax.Array, w: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Dense baseline kernel wrapper (pads to MXU-aligned tiles)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    m, k = x.shape
+    _, n = w.shape
+    bm = 128 if m % 128 == 0 else (8 if m % 8 == 0 else 1)
+    y = dense_matmul(x, w, bm=bm, interpret=interp)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Row-wise (paper-format) packed linear
+# --------------------------------------------------------------------------
+
+from ..core.packing import RowPacked, pack_rows  # noqa: E402
+from .ref import vusa_packed_ref  # noqa: E402
+from .vusa_packed import vusa_packed_matmul  # noqa: E402
+
+
+@dataclasses.dataclass
+class RowPackedLinear:
+    """Device-resident row-wise VUSA pack (see kernels/vusa_packed.py)."""
+
+    values: jax.Array  # (T, K, J*A)
+    positions: jax.Array  # (T, K, J*A) int8
+    k: int
+    c: int
+    a: int
+    m: int = 128  # window width (lanes)
+
+    @property
+    def byte_ratio(self) -> float:
+        t, k, s = self.values.shape
+        dense = self.k * t * self.m * self.values.dtype.itemsize
+        return t * k * s * (self.values.dtype.itemsize + 1) / dense
+
+
+def pack_linear_rows(w: np.ndarray, m: int = 128, a: int = 16) -> RowPackedLinear:
+    rp: RowPacked = pack_rows(np.asarray(w), m=m, a=a)
+    return RowPackedLinear(
+        values=jnp.asarray(rp.values),
+        positions=jnp.asarray(rp.row_positions),
+        k=rp.k,
+        c=rp.c,
+        a=a,
+        m=m,
+    )
+
+
+def apply_row_packed(
+    x: jax.Array, p: RowPackedLinear, *, interpret: bool | None = None, k_blk: int = 256
+) -> jax.Array:
+    """y = x @ W for row-packed W.  x: (..., K) -> (..., C)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    k_blk = min(k_blk, xf.shape[-1])
+    while xf.shape[-1] % k_blk:
+        k_blk //= 2
+    y = vusa_packed_matmul(xf, p.values, p.positions, m=p.m, k_blk=max(k_blk, 1), interpret=interp)
+    return y[..., : p.c].reshape(*lead, p.c).astype(x.dtype)
+
+
+def apply_row_packed_ref(x: jax.Array, p: RowPackedLinear) -> jax.Array:
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    y = vusa_packed_ref(xf, p.values, p.positions)
+    return y[..., : p.c].reshape(*lead, p.c).astype(x.dtype)

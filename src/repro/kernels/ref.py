@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+``vusa_spmm_ref`` consumes the *packed* operands, so kernel-vs-ref equality
+checks the kernel, and ``unpack_blocks``-vs-dense checks the packer — the two
+composed give end-to-end ``x @ W`` equality (see tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["dense_matmul_ref", "vusa_spmm_ref", "vusa_packed_ref"]
+
+
+def dense_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(B, K) @ (K, C) in fp32 accumulation."""
+    return jnp.einsum("bk,kc->bc", x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def vusa_spmm_ref(x: jnp.ndarray, values: jnp.ndarray, row_idx: jnp.ndarray) -> jnp.ndarray:
+    """Block-VUSA packed matmul, pure jnp.
+
+    x:       (B, K)
+    values:  (T, J, A, Tn)  packed non-zero weight rows per output tile
+    row_idx: (T, J, A)      absolute K index per packed row (padding -> 0
+                            with zero values)
+    returns  (B, T * Tn)
+    """
+    t, j, a, tn = values.shape
+    xg = x[:, row_idx]  # (B, T, J, A) gather — the SPE->MAC shifter
+    y = jnp.einsum("btja,tjan->btn", xg.astype(jnp.float32), values.astype(jnp.float32))
+    return y.reshape(x.shape[0], t * tn).astype(x.dtype)
+
+
+def vusa_packed_ref(x: jnp.ndarray, values: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise VUSA packed matmul oracle, pure jnp.
+
+    x: (B, K); values/positions: (T, K, S) with int8 lane positions
+    (-1 = idle slot).  Returns (B, T*128) fp32.
+    """
+    t, k, s = values.shape
+    m = 128
+    lanes = jnp.arange(m, dtype=jnp.int32)
+    onehot = (positions.astype(jnp.int32)[..., None] == lanes).astype(jnp.float32)
+    w = jnp.einsum("tks,tksm->tkm", values.astype(jnp.float32), onehot)  # (T,K,M)
+    w = w.transpose(1, 0, 2).reshape(k, t * m)
+    return jnp.einsum("bk,kc->bc", x.astype(jnp.float32), w)

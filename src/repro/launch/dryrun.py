@@ -1,0 +1,293 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture x input shape)
+cell on the production meshes, and record memory / cost / collective
+statistics for the roofline analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+Results are appended incrementally to experiments/dryrun/*.json so the sweep
+is resumable and partial results survive crashes.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from ..dist.sharding import (  # noqa: E402
+    act_rules,
+    batch_shardings,
+    params_shardings,
+    serve_shardings,
+)
+from ..models import build_model  # noqa: E402
+from ..models.common import abstract_params, mesh_context  # noqa: E402
+from ..optim import AdamState  # noqa: E402
+from ..train.step import TrainHParams, make_train_step  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# long_500k requires sub-quadratic attention; these archs run it, the pure
+# full-attention ones are recorded as explicit skips (DESIGN.md §Shape notes).
+LONG_OK = {"recurrentgemma_9b", "mamba2_2_7b"}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?\S+\s*=\s*)?"
+    r"((?:\([^)]*\)|\S+?))\s+"  # result type (may be a tuple)
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+    re.M,
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2,
+          "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-operand bytes per collective type from (S)HLO text.
+
+    Sizes are per-device (the module is the SPMD per-device program)."""
+    stats: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        rtype, op = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(rtype):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES.get(dt.split("e")[0] if dt.startswith("f8") else dt, 4)
+        # group size (participants) for this collective, if printed on the line
+        line = hlo_text[m.start() : hlo_text.find("\n", m.start())]
+        gm = _GROUPS_RE.search(line)
+        gsize = len(gm.group(1).split(",")) if gm else 0
+        e = stats.setdefault(op, {"count": 0, "bytes": 0, "group_sizes": {}})
+        e["count"] += 1
+        e["bytes"] += nbytes
+        if gsize:
+            e["group_sizes"][str(gsize)] = e["group_sizes"].get(str(gsize), 0) + 1
+    return stats
+
+
+def _abstract_adam(params_abs) -> AdamState:
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t
+    )
+    return AdamState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=f32(params_abs), nu=f32(params_abs)
+    )
+
+
+def lower_cell(arch: str, shape_name: str, mesh, rules, variant: str = "baseline") -> dict:
+    """Lower + compile one (arch, shape, mesh) cell; return the record.
+
+    variant: "baseline" = paper-faithful first implementation (flash-chunked
+    decode attention, scatter MoE, default sharding); "opt" = the hillclimbed
+    lowering (EXPERIMENTS.md §Perf records the A/B)."""
+    from ..models import opt_flags
+
+    (opt_flags.set_baseline if variant == "baseline" else opt_flags.set_opt)()
+    # fine-grained overrides for hypothesis-level A/B: REPRO_FLAGS="name=0,name=1"
+    for kv in filter(None, os.environ.get("REPRO_FLAGS", "").split(",")):
+        name, val = kv.split("=")
+        opt_flags.FLAGS[name.strip()] = bool(int(val))
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    params_abs = abstract_params(model.specs())
+    p_shard = params_shardings(model.specs(), mesh)
+
+    if shape.kind == "train":
+        hp = TrainHParams(microbatches=1)
+        step_fn = make_train_step(model.loss, hp)
+        batch_abs = model.input_specs(shape.global_batch, shape.seq_len, "train")
+        opt_abs = _abstract_adam(params_abs)
+        opt_shard = AdamState(
+            step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            mu=p_shard,
+            nu=p_shard,
+        )
+        b_shard = batch_shardings(mesh, batch_abs)
+        with mesh_context(mesh, rules):
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, opt_shard, b_shard),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        batch_abs = model.input_specs(shape.global_batch, shape.seq_len, "prefill")
+        b_shard = batch_shardings(mesh, batch_abs)
+
+        if cfg.family in ("dense", "moe", "vlm", "encdec"):
+            fn = lambda p, b: model.prefill(p, b, shape.seq_len)
+        else:  # hybrid/ssm prefill == scoring pass (state capture is O(1))
+            fn = lambda p, b: model.forward(p, b)
+        with mesh_context(mesh, rules):
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        cache_abs = model.cache_specs(shape.global_batch, shape.seq_len)
+        c_shard = serve_shardings(cache_abs, mesh, shape.global_batch)
+        tok_abs = model.input_specs(shape.global_batch, shape.seq_len, "decode")["token"]
+        t_shard = batch_shardings(mesh, {"token": tok_abs})["token"]
+
+        def serve_step(p, tok, cache):
+            return model.decode_step(p, tok, cache)
+
+        with mesh_context(mesh, rules):
+            jitted = jax.jit(
+                serve_step, in_shardings=(p_shard, t_shard, c_shard), donate_argnums=(2,)
+            )
+            lowered = jitted.lower(params_abs, tok_abs, cache_abs)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if os.environ.get("DRYRUN_PRINT", "1") != "0":
+        print(mem)    # proves it fits
+        print({k: v for k, v in (cost or {}).items() if k in ("flops", "bytes accessed", "transcendentals")})
+    hlo_text = compiled.as_text()
+    # keep the optimized HLO for hillclimb diffing / re-analysis
+    import gzip
+
+    hlo_dir = OUT_DIR.parent / "hlo"
+    hlo_dir.mkdir(parents=True, exist_ok=True)
+    mesh_kind = "multi" if "pod" in mesh.shape else "single"
+    with gzip.open(hlo_dir / f"{arch}__{shape_name}__{mesh_kind}__{variant}.txt.gz", "wt") as fh:
+        fh.write(hlo_text)
+    colls = collective_stats(hlo_text)
+    from .hlo_cost import hlo_cost  # loop-trip-weighted per-device costs
+
+    weighted = hlo_cost(hlo_text)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(mesh.shape),
+        "kind": shape.kind,
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+        "cost": {
+            k: v
+            for k, v in (cost or {}).items()
+            if isinstance(v, (int, float)) and k in ("flops", "transcendentals", "bytes accessed")
+        },
+        # loop-trip-weighted, per-device (see launch/hlo_cost.py)
+        "weighted": {
+            "dot_flops": weighted["dot_flops"],
+            "bytes": weighted["bytes"],
+            "transcendentals": weighted["transcendentals"],
+            "collectives": weighted["collectives"],
+        },
+        "collectives_unweighted": colls,
+        "n_devices": mesh.devices.size,
+    }
+    return record
+
+
+def cells(mesh_kind: str):
+    for arch in ARCH_IDS:
+        if arch == "vusa_edge":
+            continue  # paper's own config benched separately, not a pool cell
+        for shape_name in SHAPES:
+            yield arch, shape_name, mesh_kind
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
+             variant: str = "baseline") -> dict:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"_{variant}"
+    out = OUT_DIR / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        rec = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_kind,
+            "status": "skip",
+            "reason": "pure full-attention arch: 500k decode is quadratic-class; "
+            "see DESIGN.md shape notes",
+        }
+        out.write_text(json.dumps(rec, indent=1))
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = act_rules(mesh)
+    try:
+        rec = lower_cell(arch, shape_name, mesh, rules, variant=variant)
+        rec["status"] = "ok"
+        rec["variant"] = variant
+    except Exception as e:  # record failures — they are bugs to fix
+        rec = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_kind,
+            "status": "fail",
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-2000:],
+        }
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="baseline | opt | opt<suffix> (suffix for flag A/Bs via REPRO_FLAGS)")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        todo = [(a, s, m) for m in meshes for (a, s, _) in cells(m)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch.replace("-", "_").replace(".", "_"), args.shape, m) for m in meshes]
+
+    for arch, shape_name, mesh_kind in todo:
+        t0 = time.time()
+        rec = run_cell(arch, shape_name, mesh_kind, force=args.force, variant=args.variant)
+        status = rec.get("status")
+        extra = ""
+        if status == "ok":
+            extra = f"compile={rec['compile_s']}s flops={rec['cost'].get('flops', 0):.3g}"
+        elif status == "fail":
+            extra = rec["error"][:120]
+        print(f"[{time.strftime('%H:%M:%S')}] {arch:22s} {shape_name:12s} {mesh_kind:6s} "
+              f"{status:5s} ({time.time()-t0:.0f}s) {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

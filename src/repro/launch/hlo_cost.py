@@ -1,0 +1,290 @@
+"""Weighted HLO cost model, parsed from ``compiled.as_text()``.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once* —
+useless for scanned-layer models where ~100% of compute sits inside loops.
+This module re-derives roofline inputs from the optimized (post-SPMD) HLO:
+
+  * ``dot_flops``         — 2*M*N*K per dot, weighted by loop trip counts
+  * ``bytes``             — per-op (result + operands) bytes, fusion-level,
+                            weighted by trip counts (XLA's own "bytes
+                            accessed" convention, but loop-aware)
+  * ``collectives``       — per-type {count, bytes} weighted by trip counts
+  * ``transcendentals``   — weighted elementwise-transcendental element count
+
+All numbers are per-device (the module is the SPMD per-device program).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional
+
+__all__ = ["parse_hlo", "hlo_cost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+# result type is either a tuple "(...)" (may contain /*index=N*/ comments,
+# so anything but parens) or a single shape token
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "get-dimension-size", "after-all",
+    "bitcast-convert",
+}
+_TRANSCENDENTAL = {"exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "exponential-minus-one"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_numel(type_str: str) -> int:
+    n_total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+class _Op:
+    __slots__ = ("name", "rtype", "opcode", "line")
+
+    def __init__(self, name, rtype, opcode, line):
+        self.name, self.rtype, self.opcode, self.line = name, rtype, opcode, line
+
+
+def parse_hlo(text: str) -> Dict[str, List[_Op]]:
+    """Split HLO text into computations: name -> [ops]."""
+    comps: Dict[str, List[_Op]] = {}
+    cur: Optional[List[_Op]] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{"):
+            cur = comps.setdefault(hdr.group(1), [])
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            cur.append(_Op(m.group(1), m.group(2), m.group(3), line))
+    return comps
+
+
+_CONST_INT = re.compile(r"\bconstant\((-?\d+)\)")
+
+
+def _while_trip(op: _Op, comps: Dict[str, List["_Op"]]) -> float:
+    """Trip count of a while op.
+
+    Prefer the explicit ``known_trip_count`` backend config; when the SPMD
+    printer drops it, recover the bound from the loop condition: lax.scan
+    always counts 0..N-1 against an s32 constant N, so the largest integer
+    constant in the condition computation is the trip count."""
+    m = _TRIP.search(op.line)
+    if m:
+        return float(m.group(1))
+    cm = _COND.search(op.line)
+    if cm:
+        bounds = []
+        for o in comps.get(cm.group(1), []):
+            if o.opcode == "constant" and o.rtype.startswith("s32"):
+                im = _CONST_INT.search(o.line)
+                if im:
+                    bounds.append(int(im.group(1)))
+        if bounds:
+            return float(max(max(bounds), 1))
+    return 1.0
+
+
+def _dot_flops(op: _Op, shapes: Dict[str, str]) -> float:
+    """2 * numel(result) * prod(contracted dims of lhs)."""
+    ops = _OPERANDS.findall(op.line[op.line.index("(") :])
+    cm = _CONTRACT.search(op.line)
+    if not ops or cm is None:
+        return 0.0
+    lhs_type = shapes.get(ops[0], "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 0.0
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    k = 1
+    for ci in cm.group(1).split(","):
+        if ci:
+            k *= dims[int(ci)]
+    return 2.0 * _type_numel(op.rtype) * k
+
+
+def hlo_cost(text: str, top_k: int = 0) -> dict:
+    """Weighted costs; with ``top_k`` > 0 also returns the top byte-consuming
+    op sites as (weighted_bytes, weight, opcode, result_type, op_name-hint)."""
+    comps = parse_hlo(text)
+    memo: Dict[str, dict] = {}
+    sites: List[tuple] = []
+    weights: Dict[str, float] = {}  # total invocation weight per computation
+
+    def analyze(comp_name: str) -> dict:
+        if comp_name in memo:
+            return memo[comp_name]
+        memo[comp_name] = res = {
+            "dot_flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+            "collectives": {},
+        }
+        ops = comps.get(comp_name, [])
+        shapes = {o.name: o.rtype for o in ops}
+        for op in ops:
+            oc = op.opcode
+            # --- recursion into called computations -----------------------
+            weight = 1.0
+            called: List[str] = []
+            if oc == "while":
+                weight = _while_trip(op, comps)
+                cm = _CALLS.search(op.line)
+                if cm:
+                    called.append(cm.group(1))
+            elif oc in ("call", "async-start"):
+                cm = _CALLS.search(op.line)
+                if cm:
+                    called.append(cm.group(1))
+            elif oc == "conditional":
+                bm = _BRANCHES.search(op.line)
+                if bm:  # worst-case: max branch (approx: first branch)
+                    called += [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+            elif oc == "fusion":
+                cm = _CALLS.search(op.line)
+                if cm:  # count dots/transcendentals inside, bytes at call site
+                    sub = analyze(cm.group(1))
+                    res["dot_flops"] += sub["dot_flops"]
+                    res["transcendentals"] += sub["transcendentals"]
+            for c in called:
+                sub = analyze(c)
+                for k in ("dot_flops", "bytes", "transcendentals"):
+                    res[k] += weight * sub[k]
+                for cname, ce in sub["collectives"].items():
+                    e = res["collectives"].setdefault(cname, {"count": 0.0, "bytes": 0.0})
+                    e["count"] += weight * ce["count"]
+                    e["bytes"] += weight * ce["bytes"]
+
+            # --- own costs -------------------------------------------------
+            if oc == "dot":
+                res["dot_flops"] += _dot_flops(op, shapes)
+            if oc in _TRANSCENDENTAL:
+                res["transcendentals"] += _type_numel(op.rtype)
+            base = oc.replace("-start", "")
+            if base in _COLLECTIVES:
+                nbytes = _type_bytes(op.rtype)
+                e = res["collectives"].setdefault(base, {"count": 0.0, "bytes": 0.0})
+                e["count"] += 1
+                e["bytes"] += nbytes
+            if oc not in _SKIP_BYTES and not oc.endswith("-done"):
+                if oc == "dynamic-slice":
+                    # reads only the slice it extracts, not the whole input
+                    res["bytes"] += 2.0 * _type_bytes(op.rtype)
+                elif oc == "dynamic-update-slice":
+                    # in-place on TPU: traffic = update read + slice write
+                    ops_ = _OPERANDS.findall(op.line[op.line.index("(") :])
+                    upd = _type_bytes(shapes.get(ops_[1], "")) if len(ops_) > 1 else 0
+                    res["bytes"] += 2.0 * upd
+                else:
+                    nbytes = _type_bytes(op.rtype)
+                    for operand in _OPERANDS.findall(op.line[op.line.index("(") :]):
+                        if operand in shapes:
+                            nbytes += _type_bytes(shapes[operand])
+                    res["bytes"] += nbytes
+        return res
+
+    entry = None
+    for name in comps:
+        if re.search(r"^ENTRY\s+%?" + re.escape(name), text, re.M):
+            entry = name
+            break
+    if entry is None:  # fall back: computation named main*
+        entry = next((n for n in comps if n.startswith("main")), next(iter(comps)))
+    result = analyze(entry)
+
+    if top_k:
+        # top-down weight propagation (HLO computations form a call tree)
+        def propagate(comp_name: str, w: float, depth: int = 0):
+            if depth > 50:
+                return
+            weights[comp_name] = weights.get(comp_name, 0.0) + w
+            for op in comps.get(comp_name, []):
+                mult = 1.0
+                called = []
+                if op.opcode == "while":
+                    mult = _while_trip(op, comps)
+                    cm = _CALLS.search(op.line)
+                    if cm:
+                        called.append(cm.group(1))
+                elif op.opcode in ("call", "async-start", "fusion"):
+                    cm = _CALLS.search(op.line)
+                    if cm and op.opcode != "fusion":
+                        called.append(cm.group(1))
+                elif op.opcode == "conditional":
+                    bm = _BRANCHES.search(op.line)
+                    if bm:
+                        called += [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+                for c in called:
+                    propagate(c, w * mult, depth + 1)
+
+        propagate(entry, 1.0)
+        for comp_name, w in weights.items():
+            ops = comps.get(comp_name, [])
+            shapes = {o.name: o.rtype for o in ops}
+            for op in ops:
+                if op.opcode in _SKIP_BYTES or op.opcode.endswith("-done"):
+                    continue
+                if op.opcode == "dynamic-slice":
+                    nbytes = 2.0 * _type_bytes(op.rtype)
+                elif op.opcode == "dynamic-update-slice":
+                    ops_ = _OPERANDS.findall(op.line[op.line.index("(") :])
+                    nbytes = 2.0 * (_type_bytes(shapes.get(ops_[1], "")) if len(ops_) > 1 else 0)
+                else:
+                    nbytes = _type_bytes(op.rtype)
+                    for operand in _OPERANDS.findall(op.line[op.line.index("(") :]):
+                        if operand in shapes:
+                            nbytes += _type_bytes(shapes[operand])
+                if nbytes:
+                    hint = ""
+                    hm = re.search(r'op_name="([^"]*)"', op.line)
+                    if hm:
+                        hint = hm.group(1)[-90:]
+                    sites.append((nbytes * w, w, op.opcode, op.rtype[:60], hint))
+        sites.sort(key=lambda s: -s[0])
+        result["top_sites"] = sites[:top_k]
+    return result

@@ -1,0 +1,25 @@
+"""Mesh construction.  Functions, not module constants — importing this
+module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Production mesh: 16x16 (one 256-chip pod) or 2x16x16 (two pods).
+
+    The ``pod`` axis is pure data-parallel; ``data`` carries DP+FSDP and
+    ``model`` carries TP/EP (see repro.dist.sharding).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist locally (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

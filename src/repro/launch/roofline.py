@@ -1,0 +1,141 @@
+"""Roofline analysis over the dry-run records (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape) cell, all in seconds per step, derived from
+the loop-trip-weighted per-device HLO costs (launch/hlo_cost.py):
+
+    compute    = dot_flops / PEAK_FLOPS
+    memory     = bytes / HBM_BW
+    collective = collective_bytes / LINK_BW
+
+Per-device numbers divided by per-chip peaks == the assignment's
+``global / (chips x peak)`` convention.  MODEL_FLOPS uses 6*N*D (train),
+2*N*D (prefill) or 2*N*B (decode), with N_active for MoE.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh single] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+DRYRUN = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """Per-device useful model FLOPs for one step of this cell."""
+    n_active = cfg.active_param_count() if cfg.family == "moe" else cfg.param_count()
+    seq = shape.seq_len
+    if cfg.family == "encdec" and shape.kind == "prefill":
+        seq = min(seq, cfg.enc_frames)  # prefill encodes frames only
+    tokens = shape.global_batch * seq
+    if shape.kind == "train":
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        total = 2.0 * n_active * tokens
+    else:  # decode: one new token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def analyze_record(rec: dict) -> dict:
+    from ..configs import SHAPES, get_config
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    w = rec["weighted"]
+    coll_bytes = sum(e["bytes"] for e in w["collectives"].values())
+    terms = {
+        "compute_s": w["dot_flops"] / PEAK_FLOPS,
+        "memory_s": w["bytes"] / HBM_BW,
+        "collective_s": coll_bytes / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, rec["n_devices"])
+    bound = max(terms.values())
+    out = {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_dev": mf,
+        "hlo_flops_dev": w["dot_flops"],
+        "useful_ratio": round(mf / w["dot_flops"], 3) if w["dot_flops"] else None,
+        # roofline fraction: useful-compute time / bound time (MFU at the bound)
+        "roofline_frac": round((mf / PEAK_FLOPS) / bound, 4) if bound else None,
+        "collective_bytes_dev": coll_bytes,
+        "temp_bytes_dev": rec["memory"].get("temp_size_in_bytes", 0),
+    }
+    return out
+
+
+_ADVICE = {
+    "compute": "cut redundant flops: remat policy / flash-backward recompute / replicated-head compute",
+    "memory": "cut bytes: fuse elementwise chains, bf16 master-compute path, larger matmul tiles",
+    "collective": "cut comm: reshard attention (head/seq axis), reduce-scatter grads, overlap with compute",
+}
+
+
+def build_table(mesh: str = "single", suffix: str = "") -> list:
+    rows = []
+    for f in sorted(DRYRUN.glob(f"*__{mesh}{suffix}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "ok" and "weighted" in rec:
+            rows.append(analyze_record(rec))
+        elif rec.get("status") == "skip":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"], "dominant": "skip",
+                         "note": rec.get("reason", "")[:60]})
+    return rows
+
+
+def to_markdown(rows: list) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | dominant | "
+           "MODEL/HLO flops | roofline frac | next lever |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r["dominant"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — | {r.get('note','')} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | **{r['dominant']}** | {r['useful_ratio']} | "
+            f"{r['roofline_frac']:.3f} | {_ADVICE[r['dominant']]} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--suffix", default="", help="record suffix, e.g. _opt for hillclimbed")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = build_table(args.mesh, args.suffix)
+    out = Path("experiments") / f"roofline_{args.mesh}{args.suffix}.json"
+    out.write_text(json.dumps(rows, indent=1))
+    if args.md:
+        print(to_markdown(rows))
+    else:
+        ok = [r for r in rows if r["dominant"] != "skip"]
+        ok.sort(key=lambda r: r["roofline_frac"] or 0)
+        print(f"{len(ok)} cells analyzed -> {out}")
+        print("\nWorst roofline fraction:")
+        for r in ok[:5]:
+            print(f"  {r['arch']:22s} {r['shape']:12s} frac={r['roofline_frac']:.4f} dom={r['dominant']}")
+        coll = sorted(ok, key=lambda r: -(r["collective_s"] / max(max(r["compute_s"], r["memory_s"]), 1e-12)))
+        print("\nMost collective-bound:")
+        for r in coll[:5]:
+            print(f"  {r['arch']:22s} {r['shape']:12s} coll={r['collective_s']:.4f}s vs "
+                  f"max(comp,mem)={max(r['compute_s'], r['memory_s']):.4f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Serving launcher: load a checkpoint (or random init), optionally prune +
+VUSA-pack, and serve batched synthetic requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch vusa_edge --smoke --packed
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..checkpoint import latest_step, restore
+from ..configs import get_config, get_smoke_config
+from ..core.pruning import prune_tree
+from ..models import build_model
+from ..serve import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--packed", action="store_true")
+    ap.add_argument("--sparsity", type=float, default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    if args.ckpt:
+        step = latest_step(args.ckpt)
+        if step is not None:
+            params = restore(args.ckpt, step, {"params": params})["params"]
+            print(f"restored step {step} from {args.ckpt}")
+    sp = cfg.sparsity if args.sparsity is None else args.sparsity
+    if sp > 0:
+        params = prune_tree(params, sp)
+    eng = Engine(cfg, params, ServeConfig(max_len=args.prompt_len + args.max_new + 8,
+                                          packed_mlp=args.packed))
+    prompts = np.ones((args.batch, args.prompt_len), np.int32)
+    out = eng.generate(prompts, max_new=args.max_new)
+    print(f"prefill {out['prefill_s']*1e3:.1f}ms  decode {out['decode_s']*1e3:.1f}ms  "
+          f"{out['tok_per_s']:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

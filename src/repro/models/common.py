@@ -1,0 +1,165 @@
+"""Model-framework plumbing: abstract parameter specs (single source of truth
+for shapes, dtypes, logical sharding axes), init, and activation-sharding
+helpers.
+
+Every layer builds a pytree of :class:`ParamSpec` leaves.  From that one tree
+we derive (a) randomly-initialised parameters, (b) ``ShapeDtypeStruct`` trees
+for AOT lowering, and (c) ``NamedSharding`` trees via the logical-axis rules
+in :mod:`repro.dist.sharding`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ParamSpec",
+    "init_params",
+    "abstract_params",
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "apply_rope",
+    "shard",
+    "mesh_context",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Abstract description of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    dtype: jnp.dtype = jnp.float32
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree, key: jax.Array):
+    """Materialise random parameters from a ParamSpec tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    )
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree (for AOT lowering — no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+# --------------------------------------------------------------------------
+# Activation sharding context
+# --------------------------------------------------------------------------
+
+import contextlib
+import threading
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, rules):
+    """Install a (mesh, logical-rules) context; ``shard()`` becomes active."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh_rules():
+    """(mesh, rules) of the innermost mesh_context, or (None, None)."""
+    state = getattr(_ctx, "state", None)
+    return state if state is not None else (None, None)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op w/o mesh)."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    used = set()
+    spec = []
+    for dim, name in zip(x.shape, axes):
+        mesh_axis = rules.get(name) if name else None
+        names = (mesh_axis,) if isinstance(mesh_axis, str) else (mesh_axis or ())
+        names = tuple(a for a in names if a in mesh.shape and a not in used)
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        if names and dim % size == 0:
+            spec.append(names if len(names) > 1 else names[0])
+            used.update(names)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+
+# --------------------------------------------------------------------------
+# Norms / RoPE
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float = 10000.0):
+    """Rotary embedding tables for integer ``positions`` (..., seq)."""
+    freqs = theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32) / (head_dim // 2))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); sin/cos: (..., seq, head_dim/2)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    sin = sin[..., :, None, :]
+    cos = cos[..., :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)

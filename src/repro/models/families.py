@@ -1,0 +1,625 @@
+"""Model families: decoder-LM (dense / MoE / VLM), hybrid (Griffin),
+SSM (Mamba-2), encoder-decoder (Whisper).
+
+A family provides:
+  specs(cfg)                          ParamSpec tree (layer-stacked)
+  forward(params, batch, cfg)         logits for teacher-forced tokens
+  loss(params, batch, cfg)            scalar LM loss (+ MoE aux)
+  init_cache(cfg, batch, max_len)     decode cache pytree (zeros)
+  cache_specs(cfg, batch, max_len)    ShapeDtypeStruct twin of init_cache
+  prefill(params, tokens, cfg)        run prompt, return (logits_last, cache)
+  decode_step(params, token, cache, cfg)  one-token step
+
+Layer parameters carry a leading "layers" axis and run under ``lax.scan``
+(small HLO, fast multi-pod compiles); ``cfg.remat`` wraps the layer body in
+``jax.checkpoint`` for training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm as ssm_mod
+from .common import ParamSpec, abstract_params, init_params, rms_norm, shard
+from .layers import (
+    MaskSpec,
+    attention,
+    attention_decode,
+    attention_specs,
+    cross_attention,
+    encode_cross_kv,
+    mlp,
+    mlp_specs,
+    moe,
+    moe_specs,
+)
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+
+def _stack_specs(tree, n: int):
+    """Add a leading `layers` axis of size n to every ParamSpec leaf."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, (None,) + s.axes, s.dtype, s.init, s.scale),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _act_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _xent(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean next-token cross-entropy; ids >= vocab (padding) are masked."""
+    from .opt_flags import FLAGS
+
+    mask = (labels >= 0) & (labels < vocab)
+    labels = jnp.clip(labels, 0, vocab - 1)
+    if FLAGS["xent_lse"]:
+        # logsumexp form: no fp32 (B,S,V) log-softmax tensor; picked logits
+        # and the reduction run in fp32, the big tensor stays in model dtype
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        ll = picked.astype(jnp.float32) - lse
+    else:
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# --------------------------------------------------------------------------
+# Decoder-only LM (dense / moe / vlm)
+# --------------------------------------------------------------------------
+
+
+def _lm_layer_specs(cfg) -> dict:
+    d = cfg.d_model
+    specs = {
+        "norm1": ParamSpec((d,), ("embed",), init="zeros"),
+        "attn": attention_specs(cfg),
+        "norm2": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+    specs["ffn"] = moe_specs(cfg) if cfg.family == "moe" else mlp_specs(cfg)
+    return specs
+
+
+def lm_specs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    specs = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), scale=1.0),
+        "layers": _stack_specs(_lm_layer_specs(cfg), cfg.n_layers),
+        "final_norm": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    if cfg.family == "vlm":
+        specs["patch_proj"] = ParamSpec((d, d), ("embed", "embed2"))
+    return specs
+
+
+def _lm_layer(lp, x, cfg, mask: MaskSpec, positions):
+    h = rms_norm(x, lp["norm1"])
+    x = x + attention(lp["attn"], h, cfg, mask, positions)
+    x = shard(x, "batch", None, "embed")
+    h = rms_norm(x, lp["norm2"])
+    if cfg.family == "moe":
+        y, aux = moe(lp["ffn"], h, cfg)
+    else:
+        y, aux = mlp(lp["ffn"], h), 0.0
+    return x + y, aux
+
+
+def _lm_backbone(params, x, cfg, mask: MaskSpec, positions):
+    layer = partial(_lm_layer, cfg=cfg, mask=mask, positions=positions)
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = layer(lp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["layers"])
+    return rms_norm(x, params["final_norm"]), aux
+
+
+def _embed_tokens(params, tokens, cfg):
+    x = params["embed"][tokens].astype(_act_dtype(cfg))
+    return x * (cfg.d_model ** 0.5 if cfg.family in ("vlm",) else 1.0)
+
+
+def _lm_inputs(params, batch, cfg):
+    """Build (x, mask, positions) from a batch; handles the VLM patch prefix."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(_act_dtype(cfg))  # (B, P, d) stub frontend
+        patches = patches @ params["patch_proj"].astype(patches.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        mask = MaskSpec("prefix", prefix_len=cfg.patch_tokens)
+    else:
+        mask = MaskSpec("causal")
+    positions = jnp.arange(x.shape[1])
+    return x, mask, positions
+
+
+def lm_forward(params, batch, cfg):
+    x, mask, positions = _lm_inputs(params, batch, cfg)
+    x = shard(x, "batch", None, "embed")
+    x, aux = _lm_backbone(params, x, cfg, mask, positions)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if cfg.family == "vlm":  # only text positions produce logits
+        logits = logits[:, cfg.patch_tokens :]
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg):
+    logits, aux = lm_forward(params, batch, cfg)
+    return _xent(logits[:, :-1], batch["tokens"][:, 1:], cfg.vocab) + 0.01 * aux
+
+
+# ---- decode ----------------------------------------------------------------
+
+
+def lm_cache_specs(cfg, batch: int, max_len: int):
+    kvh, hd = cfg.kv_heads, cfg.hd
+    kv = jax.ShapeDtypeStruct((cfg.n_layers, batch, max_len, kvh, hd), _act_dtype(cfg))
+    return {
+        "k": kv,
+        "v": kv,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def lm_init_cache(cfg, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), lm_cache_specs(cfg, batch, max_len)
+    )
+
+
+def _lm_decode_layer(lp, x, cache_l, cfg, pos):
+    h = rms_norm(x, lp["norm1"])
+    y, new_cache = attention_decode(lp["attn"], h, cfg, {**cache_l, "pos": pos})
+    x = x + y
+    h = rms_norm(x, lp["norm2"])
+    if cfg.family == "moe":
+        y, _ = moe(lp["ffn"], h, cfg)
+    else:
+        y = mlp(lp["ffn"], h)
+    return x + y, {"k": new_cache["k"], "v": new_cache["v"]}
+
+
+def lm_decode_step(params, token, cache, cfg):
+    """token: (B, 1) int32.  Returns (logits (B, 1, V), new cache)."""
+    x = _embed_tokens(params, token, cfg)
+    pos = cache["pos"]
+
+    def body(x, layer_in):
+        lp, cache_l = layer_in
+        x, new_c = _lm_decode_layer(lp, x, cache_l, cfg, pos)
+        return x, new_c
+
+    x, new_kv = jax.lax.scan(body, x, (params["layers"], {"k": cache["k"], "v": cache["v"]}))
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return logits, {**new_kv, "pos": pos + 1}
+
+
+def lm_prefill(params, batch, cfg, max_len: int):
+    """Run the prompt through the train path, then bulk-write the KV cache.
+
+    For lowering/runtime simplicity we recompute K/V per layer into the cache
+    (prefill is compute-bound anyway; the flash path already produced the
+    hidden states)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = lm_init_cache(cfg, b, max_len)
+    x, mask, positions = _lm_inputs(params, batch, cfg)
+
+    from .layers import _project_qkv  # noqa: PLC0415
+
+    def body(carry, lp):
+        x, ks, vs = carry
+        h = rms_norm(x, lp["norm1"])
+        _, k, v = _project_qkv(lp["attn"], h, cfg, positions)
+        x, _ = _lm_layer(lp, x, cfg, mask, positions)
+        return (x, ks, vs), (k, v)
+
+    (xf, _, _), (ks, vs) = jax.lax.scan(body, (x, 0, 0), params["layers"])
+    xf = rms_norm(xf, params["final_norm"])
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0)
+    )
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0)
+    )
+    cache["pos"] = jnp.int32(x.shape[1])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", xf[:, -1], head.astype(xf.dtype))
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Hybrid (Griffin / recurrentgemma): pattern of RG-LRU and local-attention
+# blocks, each followed by an MLP block.
+# --------------------------------------------------------------------------
+
+
+def _hybrid_layer_specs(cfg, kind: str) -> dict:
+    d = cfg.d_model
+    mixer = ssm_mod.rglru_specs(cfg) if kind == "rglru" else attention_specs(cfg)
+    return {
+        "norm1": ParamSpec((d,), ("embed",), init="zeros"),
+        "mixer": mixer,
+        "norm2": ParamSpec((d,), ("embed",), init="zeros"),
+        "ffn": mlp_specs(cfg),
+    }
+
+
+def _hybrid_pattern(cfg):
+    reps = (cfg.n_layers + len(cfg.block_pattern) - 1) // len(cfg.block_pattern)
+    return (cfg.block_pattern * reps)[: cfg.n_layers]
+
+
+def hybrid_specs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    tail = _hybrid_pattern(cfg)[n_groups * len(pat) :]
+    specs = {
+        "embed": ParamSpec((v, d), ("vocab", "embed")),
+        "groups": {
+            f"p{i}_{kind}": _stack_specs(_hybrid_layer_specs(cfg, kind), n_groups)
+            for i, kind in enumerate(pat)
+        },
+        "tail": {
+            f"t{i}_{kind}": _hybrid_layer_specs(cfg, kind) for i, kind in enumerate(tail)
+        },
+        "final_norm": ParamSpec((d,), ("embed",), init="zeros"),
+        "lm_head": ParamSpec((d, v), ("embed", "vocab")),
+    }
+    return specs
+
+
+def _hybrid_layer(lp, x, kind, cfg, positions):
+    h = rms_norm(x, lp["norm1"])
+    if kind == "rglru":
+        y = ssm_mod.rglru_block(lp["mixer"], h, cfg)
+    else:
+        y = attention(lp["mixer"], h, cfg, MaskSpec("local", window=cfg.local_window), positions)
+    x = x + y
+    x = shard(x, "batch", None, "embed")
+    h = rms_norm(x, lp["norm2"])
+    return x + mlp(lp["ffn"], h)
+
+
+def hybrid_forward(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(_act_dtype(cfg))
+    positions = jnp.arange(x.shape[1])
+    pat = cfg.block_pattern
+
+    def group_body(x, gp):
+        for i, kind in enumerate(pat):
+            fn = partial(_hybrid_layer, kind=kind, cfg=cfg, positions=positions)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            x = fn(gp[f"p{i}_{kind}"], x)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    for name, lp in params["tail"].items():
+        kind = name.split("_", 1)[1]
+        x = _hybrid_layer(lp, x, kind, cfg, positions)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, 0.0
+
+
+def hybrid_loss(params, batch, cfg):
+    logits, _ = hybrid_forward(params, batch, cfg)
+    return _xent(logits[:, :-1], batch["tokens"][:, 1:], cfg.vocab)
+
+
+def hybrid_cache_specs(cfg, batch: int, max_len: int):
+    """Per pattern-position caches (stacked over groups) + tail caches.
+
+    Attention layers keep a ring cache bounded by the local window — this is
+    what makes long_500k decode O(window), not O(seq)."""
+    kvh, hd, r = cfg.kv_heads, cfg.hd, cfg.rglru_dim
+    ring = min(cfg.local_window, max_len)
+    n_groups = cfg.n_layers // len(cfg.block_pattern)
+    adt = _act_dtype(cfg)
+
+    def mixer_cache(kind, n=None):
+        lead = (n,) if n else ()
+        if kind == "rglru":
+            return {
+                "conv": jax.ShapeDtypeStruct(lead + (batch, 3, r), adt),
+                "h": jax.ShapeDtypeStruct(lead + (batch, r), jnp.float32),
+            }
+        return {
+            "k": jax.ShapeDtypeStruct(lead + (batch, ring, kvh, hd), adt),
+            "v": jax.ShapeDtypeStruct(lead + (batch, ring, kvh, hd), adt),
+        }
+
+    pat = cfg.block_pattern
+    tail = _hybrid_pattern(cfg)[n_groups * len(pat) :]
+    return {
+        "groups": {
+            f"p{i}_{kind}": mixer_cache(kind, n_groups) for i, kind in enumerate(pat)
+        },
+        "tail": {f"t{i}_{kind}": mixer_cache(kind) for i, kind in enumerate(tail)},
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def hybrid_init_cache(cfg, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), hybrid_cache_specs(cfg, batch, max_len)
+    )
+
+
+def _hybrid_decode_layer(lp, x, cache_l, kind, cfg, pos):
+    h = rms_norm(x, lp["norm1"])
+    if kind == "rglru":
+        y, new_c = ssm_mod.rglru_decode(lp["mixer"], h, cfg, cache_l)
+    else:
+        y, new_c = attention_decode(
+            lp["mixer"], h, cfg, {**cache_l, "pos": pos}, window=cfg.local_window
+        )
+        new_c = {"k": new_c["k"], "v": new_c["v"]}
+    x = x + y
+    h = rms_norm(x, lp["norm2"])
+    return x + mlp(lp["ffn"], h), new_c
+
+
+def hybrid_decode_step(params, token, cache, cfg):
+    x = params["embed"][token].astype(_act_dtype(cfg))
+    pos = cache["pos"]
+    pat = cfg.block_pattern
+
+    def group_body(x, inp):
+        gp, gc = inp
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            key = f"p{i}_{kind}"
+            x, new_caches[key] = _hybrid_decode_layer(gp[key], x, gc[key], kind, cfg, pos)
+        return x, new_caches
+
+    x, new_group_cache = jax.lax.scan(group_body, x, (params["groups"], cache["groups"]))
+    new_tail = {}
+    for name, lp in params["tail"].items():
+        kind = name.split("_", 1)[1]
+        x, new_tail[name] = _hybrid_decode_layer(lp, x, cache["tail"][name], kind, cfg, pos)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, {"groups": new_group_cache, "tail": new_tail, "pos": pos + 1}
+
+
+# --------------------------------------------------------------------------
+# SSM (Mamba-2)
+# --------------------------------------------------------------------------
+
+
+def ssm_specs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    layer = {
+        "norm": ParamSpec((d,), ("embed",), init="zeros"),
+        "mixer": ssm_mod.mamba2_specs(cfg),
+    }
+    return {
+        "embed": ParamSpec((v, d), ("vocab", "embed")),
+        "layers": _stack_specs(layer, cfg.n_layers),
+        "final_norm": ParamSpec((d,), ("embed",), init="zeros"),
+        "lm_head": ParamSpec((d, v), ("embed", "vocab")),
+    }
+
+
+def ssm_forward(params, batch, cfg):
+    x = params["embed"][batch["tokens"]].astype(_act_dtype(cfg))
+
+    def layer(lp, x):
+        return x + ssm_mod.mamba2_block(lp["mixer"], rms_norm(x, lp["norm"]), cfg)
+
+    fn = jax.checkpoint(layer) if cfg.remat else layer
+
+    def body(x, lp):
+        return fn(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype)), 0.0
+
+
+def ssm_loss(params, batch, cfg):
+    logits, _ = ssm_forward(params, batch, cfg)
+    return _xent(logits[:, :-1], batch["tokens"][:, 1:], cfg.vocab)
+
+
+def ssm_cache_specs(cfg, batch: int, max_len: int):
+    din = cfg.expand * cfg.d_model
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * n
+    adt = _act_dtype(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((cfg.n_layers, batch, cfg.d_conv - 1, conv_dim), adt),
+        "state": jax.ShapeDtypeStruct((cfg.n_layers, batch, h, din // h, n), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def ssm_init_cache(cfg, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), ssm_cache_specs(cfg, batch, max_len)
+    )
+
+
+def ssm_decode_step(params, token, cache, cfg):
+    x = params["embed"][token].astype(_act_dtype(cfg))
+
+    def body(x, inp):
+        lp, conv_c, state_c = inp
+        y, new_c = ssm_mod.mamba2_decode(
+            lp["mixer"], rms_norm(x, lp["norm"]), cfg, {"conv": conv_c, "state": state_c}
+        )
+        return x + y, (new_c["conv"], new_c["state"])
+
+    x, (conv, state) = jax.lax.scan(body, x, (params["layers"], cache["conv"], cache["state"]))
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, {"conv": conv, "state": state, "pos": cache["pos"] + 1}
+
+
+# --------------------------------------------------------------------------
+# Encoder-decoder (Whisper): stub conv frontend — the encoder consumes
+# precomputed frame embeddings (assignment spec), then full self-attention.
+# --------------------------------------------------------------------------
+
+
+def encdec_specs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    enc_layer = {
+        "norm1": ParamSpec((d,), ("embed",), init="zeros"),
+        "attn": attention_specs(cfg),
+        "norm2": ParamSpec((d,), ("embed",), init="zeros"),
+        "ffn": mlp_specs(cfg),
+    }
+    dec_layer = {
+        "norm1": ParamSpec((d,), ("embed",), init="zeros"),
+        "self_attn": attention_specs(cfg),
+        "norm_x": ParamSpec((d,), ("embed",), init="zeros"),
+        "cross_attn": attention_specs(cfg),
+        "norm2": ParamSpec((d,), ("embed",), init="zeros"),
+        "ffn": mlp_specs(cfg),
+    }
+    return {
+        "embed": ParamSpec((v, d), ("vocab", "embed")),
+        "enc_pos": ParamSpec((cfg.enc_frames, d), (None, "embed"), scale=0.02),
+        "enc_layers": _stack_specs(enc_layer, cfg.enc_layers),
+        "enc_norm": ParamSpec((d,), ("embed",), init="zeros"),
+        "dec_layers": _stack_specs(dec_layer, cfg.n_layers),
+        "final_norm": ParamSpec((d,), ("embed",), init="zeros"),
+    }  # lm_head tied to embed (Whisper convention)
+
+
+def encdec_encode(params, frames, cfg):
+    """frames: (B, F, d) stub frame embeddings -> encoder states."""
+    x = frames.astype(_act_dtype(cfg)) + params["enc_pos"][None, : frames.shape[1]].astype(
+        _act_dtype(cfg)
+    )
+    positions = jnp.arange(x.shape[1])
+
+    def layer(lp, x):
+        h = rms_norm(x, lp["norm1"])
+        x = x + attention(lp["attn"], h, cfg, MaskSpec("full"), positions)
+        h = rms_norm(x, lp["norm2"])
+        return x + mlp(lp["ffn"], h)
+
+    fn = jax.checkpoint(layer) if cfg.remat else layer
+
+    def body(x, lp):
+        return fn(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def encdec_forward(params, batch, cfg):
+    """batch: {"frames": (B,F,d), "tokens": (B,S)}."""
+    enc = encdec_encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(_act_dtype(cfg))
+    positions = jnp.arange(x.shape[1])
+
+    def layer(lp, x):
+        h = rms_norm(x, lp["norm1"])
+        x = x + attention(lp["self_attn"], h, cfg, MaskSpec("causal"), positions)
+        h = rms_norm(x, lp["norm_x"])
+        kv = encode_cross_kv(lp["cross_attn"], enc, cfg)
+        x = x + cross_attention(lp["cross_attn"], h, kv, cfg)
+        h = rms_norm(x, lp["norm2"])
+        return x + mlp(lp["ffn"], h)
+
+    fn = jax.checkpoint(layer) if cfg.remat else layer
+
+    def body(x, lp):
+        return fn(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T.astype(x.dtype))
+    return logits, 0.0
+
+
+def encdec_loss(params, batch, cfg):
+    logits, _ = encdec_forward(params, batch, cfg)
+    return _xent(logits[:, :-1], batch["tokens"][:, 1:], cfg.vocab)
+
+
+def encdec_cache_specs(cfg, batch: int, max_len: int):
+    kvh, hd = cfg.kv_heads, cfg.hd
+    adt = _act_dtype(cfg)
+    L = cfg.n_layers
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, max_len, kvh, hd), adt),
+        "v": jax.ShapeDtypeStruct((L, batch, max_len, kvh, hd), adt),
+        # precomputed cross-attention K/V over encoder frames
+        "xk": jax.ShapeDtypeStruct((L, batch, cfg.enc_frames, kvh, hd), adt),
+        "xv": jax.ShapeDtypeStruct((L, batch, cfg.enc_frames, kvh, hd), adt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def encdec_init_cache(cfg, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), encdec_cache_specs(cfg, batch, max_len)
+    )
+
+
+def encdec_decode_step(params, token, cache, cfg):
+    """Decode one token; cross K/V must have been filled by encdec_prefill."""
+    x = params["embed"][token].astype(_act_dtype(cfg))
+    pos = cache["pos"]
+
+    def body(x, inp):
+        lp, k, v, xk, xv = inp
+        h = rms_norm(x, lp["norm1"])
+        y, new_c = attention_decode(lp["self_attn"], h, cfg, {"k": k, "v": v, "pos": pos})
+        x = x + y
+        h = rms_norm(x, lp["norm_x"])
+        x = x + cross_attention(lp["cross_attn"], h, (xk, xv), cfg)
+        h = rms_norm(x, lp["norm2"])
+        return x + mlp(lp["ffn"], h), (new_c["k"], new_c["v"])
+
+    x, (k, v) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T.astype(x.dtype))
+    return logits, {**cache, "k": k, "v": v, "pos": pos + 1}
+
+
+def encdec_prefill(params, batch, cfg, max_len: int):
+    """Encode frames, fill cross-attn K/V, return cache ready for decode."""
+    enc = encdec_encode(params, batch["frames"], cfg)
+    b = enc.shape[0]
+    cache = encdec_init_cache(cfg, b, max_len)
+
+    def body(_, lp):
+        return None, encode_cross_kv(lp["cross_attn"], enc, cfg)
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec_layers"])
+    cache["xk"], cache["xv"] = xk.astype(cache["xk"].dtype), xv.astype(cache["xv"].dtype)
+    logits = jnp.zeros((b, cfg.padded_vocab), _act_dtype(cfg))
+    return logits, cache

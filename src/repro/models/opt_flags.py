@@ -1,0 +1,51 @@
+"""Beyond-paper performance switches (EXPERIMENTS.md §Perf).
+
+Every flag defaults to the optimized value for production use; the dry-run
+driver flips them to the paper-faithful baseline to record the A/B.  Each
+flag is one hypothesis->change->measure cycle documented in §Perf.
+"""
+
+from __future__ import annotations
+
+FLAGS = {
+    # flash attention custom VJP: recompute scores in backward instead of
+    # letting scan-autodiff stack every per-chunk probability tensor as a
+    # residual (the dominant HBM term of every train cell at baseline)
+    "flash_custom_vjp": True,
+    # decode attention: direct (seq stays sharded) vs flash-chunked scan
+    "decode_direct": True,
+    # flash attention: carry the probability matrix in bf16 between the QK
+    # and AV einsums (fp32 accumulation preserved via preferred_element_type)
+    "attn_bf16_probs": True,
+    # cross-entropy via logsumexp on bf16 logits (no fp32 log_softmax tensor)
+    "xent_lse": True,
+    # sequence-parallel attention (shard_map over the model axis on the
+    # q-sequence dim) for archs whose head count does not divide TP — keeps
+    # score compute/memory sharded with near-zero collectives
+    "attn_seq_shard": True,
+    # SSD (mamba2): smaller chunk length.  REFUTED (§Perf P7): the measured
+    # bytes ROSE 156->284 s at Q=64 — the scan-residual/state path (prop. to
+    # S/Q chunks) outweighs the O(S*Q) decay-matrix saving under autodiff.
+    # The real fix is an SSD custom VJP (flash-style recompute), future work.
+    "ssd_small_chunk": False,
+    # MoE: sort-based position-in-expert (O(T log T) int32) instead of the
+    # (T*k, E) one-hot cumsum (O(T*E) int32 traffic)
+    "moe_sort_positions": True,
+    # MoE: shard the dispatch buffers over (experts x data).  REFUTED on the
+    # 16x16 mesh (EXPERIMENTS.md §Perf iteration O2/O3): GSPMD lowers the
+    # scatter to full-replica all-reduces even behind optimization barriers;
+    # net bound got worse than leaving the capacity replicated.  Kept as a
+    # flag for meshes where a ragged all-to-all dispatch lands in JAX.
+    "moe_shard_capacity": False,
+}
+
+_OPT_PROFILE = dict(FLAGS)
+
+
+def set_baseline():
+    for k in FLAGS:
+        FLAGS[k] = False
+
+
+def set_opt():
+    FLAGS.update(_OPT_PROFILE)

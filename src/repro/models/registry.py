@@ -1,0 +1,127 @@
+"""Model facade: one object per architecture with a uniform API, backed by
+the family implementations in :mod:`repro.models.families`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import families as F
+from .common import abstract_params, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- params ----
+    def specs(self):
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            return F.lm_specs(self.cfg)
+        if fam == "hybrid":
+            return F.hybrid_specs(self.cfg)
+        if fam == "ssm":
+            return F.ssm_specs(self.cfg)
+        if fam == "encdec":
+            return F.encdec_specs(self.cfg)
+        raise ValueError(fam)
+
+    def init(self, key: jax.Array):
+        return init_params(self.specs(), key)
+
+    def abstract_params(self):
+        return abstract_params(self.specs())
+
+    # ---- train ----
+    def loss(self, params, batch):
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            return F.lm_loss(params, batch, self.cfg)
+        if fam == "hybrid":
+            return F.hybrid_loss(params, batch, self.cfg)
+        if fam == "ssm":
+            return F.ssm_loss(params, batch, self.cfg)
+        if fam == "encdec":
+            return F.encdec_loss(params, batch, self.cfg)
+        raise ValueError(fam)
+
+    def forward(self, params, batch):
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            return F.lm_forward(params, batch, self.cfg)
+        if fam == "hybrid":
+            return F.hybrid_forward(params, batch, self.cfg)
+        if fam == "ssm":
+            return F.ssm_forward(params, batch, self.cfg)
+        if fam == "encdec":
+            return F.encdec_forward(params, batch, self.cfg)
+        raise ValueError(fam)
+
+    # ---- serve ----
+    def cache_specs(self, batch: int, max_len: int):
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            return F.lm_cache_specs(self.cfg, batch, max_len)
+        if fam == "hybrid":
+            return F.hybrid_cache_specs(self.cfg, batch, max_len)
+        if fam == "ssm":
+            return F.ssm_cache_specs(self.cfg, batch, max_len)
+        if fam == "encdec":
+            return F.encdec_cache_specs(self.cfg, batch, max_len)
+        raise ValueError(fam)
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_specs(batch, max_len)
+        )
+
+    def decode_step(self, params, token, cache):
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            return F.lm_decode_step(params, token, cache, self.cfg)
+        if fam == "hybrid":
+            return F.hybrid_decode_step(params, token, cache, self.cfg)
+        if fam == "ssm":
+            return F.ssm_decode_step(params, token, cache, self.cfg)
+        if fam == "encdec":
+            return F.encdec_decode_step(params, token, cache, self.cfg)
+        raise ValueError(fam)
+
+    def prefill(self, params, batch, max_len: int):
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            return F.lm_prefill(params, batch, self.cfg, max_len)
+        if fam == "encdec":
+            return F.encdec_prefill(params, batch, self.cfg, max_len)
+        raise NotImplementedError(f"prefill for {fam} uses forward+state capture")
+
+    # ---- input specs (for AOT lowering; ShapeDtypeStruct only) ----
+    def input_specs(self, batch: int, seq: int, kind: str = "train") -> Dict[str, Any]:
+        """Stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        i32 = jnp.int32
+        if kind in ("train", "prefill"):
+            spec: Dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+            if cfg.family == "vlm":
+                spec["tokens"] = jax.ShapeDtypeStruct((batch, seq - cfg.patch_tokens), i32)
+                spec["patches"] = jax.ShapeDtypeStruct(
+                    (batch, cfg.patch_tokens, cfg.d_model), jnp.float32
+                )
+            if cfg.family == "encdec":
+                spec["frames"] = jax.ShapeDtypeStruct(
+                    (batch, min(seq, cfg.enc_frames), cfg.d_model), jnp.float32
+                )
+            return spec
+        if kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((batch, 1), i32)}
+        raise ValueError(kind)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,235 @@
+"""Attention-free temporal mixers.
+
+* Mamba-2 SSD (state-space duality, arXiv:2405.21060): chunked matrix form
+  for train/prefill (parallel, MXU-friendly) + O(1)-state decode step.
+* RG-LRU (Griffin / recurrentgemma, arXiv:2402.19427): gated linear
+  recurrence via ``jax.lax.associative_scan`` + decode step, with the
+  Griffin recurrent block wrapper (conv1d + GELU gate).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, rms_norm, shard
+from .opt_flags import FLAGS
+
+# --------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# --------------------------------------------------------------------------
+
+
+def mamba2_specs(cfg) -> dict:
+    d = cfg.d_model
+    din = cfg.expand * d
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * n
+    return {
+        # order: z (din) | x (din) | B (n) | C (n) | dt (h)
+        "in_proj": ParamSpec((d, 2 * din + 2 * n + h), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.d_conv, conv_dim), (None, "ssm_inner"), scale=0.5),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((h,), (None,), init="ones"),
+        "D": ParamSpec((h,), (None,), init="ones"),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros"),
+        "norm": ParamSpec((din,), ("ssm_inner",), init="zeros"),
+        "out_proj": ParamSpec((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None] for i in range(k))
+    return out + b[None, None]
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise segment sums: out[..., i, j] = sum_{j<t<=i} x_t."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P)  dt: (B,S,H)  a: (H,) negative  b_mat/c_mat: (B,S,N)
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    xs = x.reshape(bsz, nc, chunk, h, p)
+    dts = dt.reshape(bsz, nc, chunk, h)
+    bs = b_mat.reshape(bsz, nc, chunk, n)
+    cs = c_mat.reshape(bsz, nc, chunk, n)
+
+    da = dts * a[None, None, None]  # (B,NC,Q,H)
+    da_cum = jnp.cumsum(da, axis=2)
+    da_total = da_cum[:, :, -1]  # (B,NC,H)
+
+    # --- intra-chunk (diagonal blocks): Y[i] += sum_{j<=i} (C_i.B_j) L_ij dt_j x_j
+    L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (B,NC,H,Q,Q)
+    cb = jnp.einsum("bcin,bcjn->bcij", cs, bs)  # (B,NC,Q,Q)
+    w = cb[:, :, None] * L  # (B,NC,H,Q,Q)
+    y_diag = jnp.einsum("bchij,bcjh,bcjhp->bcihp", w, dts, xs)
+
+    # --- chunk states: S_c = sum_j exp(da_total - da_cum_j) dt_j B_j x_j^T
+    decay = jnp.exp(da_total[:, :, None] - da_cum)  # (B,NC,Q,H)
+    states = jnp.einsum("bcqh,bcqh,bcqn,bcqhp->bchpn", decay, dts, bs, xs)
+
+    # --- inter-chunk recurrence over NC
+    def step(s_prev, inp):
+        st, dtot = inp  # (B,H,P,N), (B,H)
+        s_new = s_prev * jnp.exp(dtot)[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), da_total.transpose(1, 0, 2))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    # --- inter-chunk output: Y[i] += C_i . (exp(da_cum_i) * S_prev)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cs, prev_states, jnp.exp(da_cum))
+
+    y = (y_diag + y_off).reshape(bsz, s + pad, h, p)[:, :s]
+    return y, final_state
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Full-sequence Mamba-2 mixer. x: (B,S,d) -> (B,S,d)."""
+    bsz, s, d = x.shape
+    din = cfg.expand * d
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    hp = din // h
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xbc = jax.nn.silu(xbc)
+    xin, b_mat, c_mat = jnp.split(xbc, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    chunk = min(64, cfg.ssm_chunk) if FLAGS["ssd_small_chunk"] else cfg.ssm_chunk
+    y, _ = _ssd_chunked(
+        xin.reshape(bsz, s, h, hp).astype(jnp.float32),
+        dt,
+        a,
+        b_mat.astype(jnp.float32),
+        c_mat.astype(jnp.float32),
+        chunk,
+    )
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xin.reshape(bsz, s, h, hp).astype(jnp.float32)
+    y = y.reshape(bsz, s, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_decode(p: dict, x: jax.Array, cfg, cache: dict) -> Tuple[jax.Array, dict]:
+    """Single-token decode. x: (B,1,d); cache: {"conv": (B,K-1,C), "state": (B,H,P,N)}."""
+    bsz, _, d = x.shape
+    din = cfg.expand * d
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    hp = din // h
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(x.dtype)  # (B, ...)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    # conv over cached window
+    win = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(x.dtype)
+    xbc_c = jnp.einsum("bkc,kc->bc", win, w) + p["conv_b"].astype(x.dtype)
+    xbc_c = jax.nn.silu(xbc_c)
+    xin, b_mat, c_mat = jnp.split(xbc_c, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(bsz, h, hp).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None])  # (B,H)
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, b_mat.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c_mat.astype(jnp.float32), state)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None]
+    return out, {"conv": win[:, 1:], "state": state}
+
+
+# --------------------------------------------------------------------------
+# RG-LRU (Griffin recurrent block)
+# --------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_specs(cfg) -> dict:
+    d, r = cfg.d_model, cfg.rglru_dim
+    return {
+        "w_x": ParamSpec((d, r), ("embed", "rglru")),
+        "w_gate_branch": ParamSpec((d, r), ("embed", "rglru")),
+        "conv_w": ParamSpec((4, r), (None, "rglru"), scale=0.5),
+        "conv_b": ParamSpec((r,), ("rglru",), init="zeros"),
+        "w_a": ParamSpec((r, r), ("rglru", "rglru_out"), scale=0.5),
+        "b_a": ParamSpec((r,), ("rglru",), init="zeros"),
+        "w_i": ParamSpec((r, r), ("rglru", "rglru_out"), scale=0.5),
+        "b_i": ParamSpec((r,), ("rglru",), init="zeros"),
+        "lam": ParamSpec((r,), (None,), init="ones"),
+        "w_out": ParamSpec((r, d), ("rglru", "embed")),
+    }
+
+
+def _rglru_gates(p, xr):
+    """Per-step gate computation. xr: (..., r)."""
+    r_gate = jax.nn.sigmoid(xr @ p["w_a"].astype(xr.dtype) + p["b_a"].astype(xr.dtype))
+    i_gate = jax.nn.sigmoid(xr @ p["w_i"].astype(xr.dtype) + p["b_i"].astype(xr.dtype))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_gate.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i_gate.astype(jnp.float32) * xr.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_block(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Griffin recurrent block, full sequence. x: (B,S,d)."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(x.dtype))
+    xr = x @ p["w_x"].astype(x.dtype)
+    xr = _causal_conv(xr, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    a, b = _rglru_gates(p, xr)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype) * gate
+    return h @ p["w_out"].astype(x.dtype)
+
+
+def rglru_decode(p: dict, x: jax.Array, cfg, cache: dict) -> Tuple[jax.Array, dict]:
+    """Single-token decode. cache: {"conv": (B,3,r), "h": (B,r)}."""
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate_branch"].astype(x.dtype))
+    xr = x[:, 0] @ p["w_x"].astype(x.dtype)
+    win = jnp.concatenate([cache["conv"], xr[:, None]], axis=1)  # (B,4,r)
+    xr = jnp.einsum("bkr,kr->br", win, p["conv_w"].astype(x.dtype)) + p["conv_b"].astype(x.dtype)
+    a, b = _rglru_gates(p, xr)
+    h = a * cache["h"] + b
+    y = h.astype(x.dtype) * gate
+    return (y @ p["w_out"].astype(x.dtype))[:, None], {"conv": win[:, 1:], "h": h}

@@ -1,0 +1,67 @@
+"""AdamW + global-norm clipping, pure JAX pytrees (no optax in-container).
+
+Optimizer state mirrors the parameter tree, so it inherits the parameter
+shardings (ZeRO-style: FSDP-sharded params => FSDP-sharded moments).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamState", "adamw_init", "adamw_update", "clip_by_global_norm"]
+
+
+class AdamState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamState:
+    zeros = lambda t: jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), t)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamState,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(step=step, mu=new_mu, nu=new_nu), gnorm

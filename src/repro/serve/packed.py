@@ -1,0 +1,106 @@
+"""VUSA-packed decode path for the dense LM family.
+
+``pack_lm_mlps`` packs every layer's MLP matrices (the dominant weight bytes)
+into the row-wise VUSA format; ``lm_decode_step_packed`` is a twin of
+``families.lm_decode_step`` whose MLP matmuls run through the Pallas kernel.
+Layer packs are stacked on a leading axis so the layer loop stays a scan.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..kernels.ops import RowPackedLinear, apply_row_packed, pack_linear_rows
+from ..models import families as F
+from ..models.common import rms_norm
+
+__all__ = ["pack_lm_mlps", "lm_decode_step_packed"]
+
+
+def pack_lm_mlps(cfg: ArchConfig, params, m: int = 128, a: int = 16) -> Dict:
+    """Pack per-layer MLP weights; returns stacked (L, ...) device arrays.
+
+    Jobs are padded to the max across layers so the stack is rectangular
+    (padded jobs are exact no-ops: value 0, position -1)."""
+    layers = params["layers"]["ffn"]
+    n_layers = cfg.n_layers
+    packed = {"w_gate": [], "w_up": [], "w_down": []}
+    for name in packed:
+        for l in range(n_layers):
+            w = np.asarray(layers[name][l])
+            packed[name].append(pack_linear_rows(w, m=m, a=a))
+    out = {}
+    for name, packs in packed.items():
+        smax = max(p.values.shape[2] for p in packs)
+
+        def pad(p: RowPackedLinear):
+            t, k, s = p.values.shape
+            v = jnp.pad(p.values, ((0, 0), (0, 0), (0, smax - s)))
+            q = jnp.pad(p.positions, ((0, 0), (0, 0), (0, smax - s)), constant_values=-1)
+            return v, q
+
+        vs, qs = zip(*(pad(p) for p in packs))
+        out[name] = {
+            "values": jnp.stack(vs),
+            "positions": jnp.stack(qs),
+            "k": packs[0].k,
+            "c": packs[0].c,
+            "m": packs[0].m,
+        }
+    return out
+
+
+def _packed_apply(x, pk, a: int):
+    p = RowPackedLinear(values=pk["values"], positions=pk["positions"], k=pk["k"], c=pk["c"], a=a)
+    return apply_row_packed(x, p)
+
+
+def lm_decode_step_packed(params, packed, token, cache, cfg):
+    """One-token decode with VUSA-packed MLPs (dense family only)."""
+    assert cfg.family == "dense", "packed decode path targets the dense family"
+    x = F._embed_tokens(params, token, cfg)
+    pos = cache["pos"]
+
+    from ..models.layers import attention_decode  # noqa: PLC0415
+
+    meta = {n: (packed[n]["k"], packed[n]["c"], packed[n]["m"]) for n in ("w_gate", "w_up", "w_down")}
+
+    def papply(name, vals, poss, x2):
+        k, c, m = meta[name]
+        p = RowPackedLinear(values=vals, positions=poss, k=k, c=c, a=16, m=m)
+        return apply_row_packed(x2, p)
+
+    def body(x, layer_in):
+        lp, cache_l, gv, gp, uv, up_, dv, dp = layer_in
+        h = rms_norm(x, lp["norm1"])
+        y, new_cache = attention_decode(lp["attn"], h, cfg, {**cache_l, "pos": pos})
+        x = x + y
+        h = rms_norm(x, lp["norm2"])
+        b, s, d = h.shape
+        hf = h.reshape(b * s, d)
+        gate = jax.nn.silu(papply("w_gate", gv, gp, hf))
+        up = papply("w_up", uv, up_, hf)
+        y2 = papply("w_down", dv, dp, (gate * up).astype(hf.dtype))
+        x = x + y2.reshape(b, s, d).astype(x.dtype)
+        return x, {"k": new_cache["k"], "v": new_cache["v"]}
+
+    x, new_kv = jax.lax.scan(
+        body,
+        x,
+        (
+            params["layers"],
+            {"k": cache["k"], "v": cache["v"]},
+            packed["w_gate"]["values"], packed["w_gate"]["positions"],
+            packed["w_up"]["values"], packed["w_up"]["positions"],
+            packed["w_down"]["values"], packed["w_down"]["positions"],
+        ),
+    )
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return logits, {**new_kv, "pos": pos + 1}

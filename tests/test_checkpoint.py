@@ -1,0 +1,64 @@
+"""Checkpoint subsystem: roundtrip, retention, atomicity, latest-step."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, restore, save
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "a": jax.random.normal(k, (4, 8)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.float32(3.5)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(tmp_path, 3, t)
+    assert latest_step(tmp_path) == 3
+    got = restore(tmp_path, 3, jax.tree_util.tree_map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention_and_latest(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    steps = sorted(int(p.name[5:]) for p in Path(tmp_path).glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_restore_latest_empty(tmp_path):
+    ck = Checkpointer(tmp_path)
+    step, tree = ck.restore_latest({"x": jnp.zeros(3)})
+    assert step is None
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=True)
+    ck.save(7, _tree())
+    ck.wait()
+    assert latest_step(tmp_path) == 7
+
+
+def test_partial_write_is_invisible(tmp_path):
+    """A crashed (tmp) write must not be picked up as a checkpoint."""
+    save(tmp_path, 1, _tree())
+    bad = Path(tmp_path) / ".tmp_step_00000002"
+    bad.mkdir()
+    (bad / "leaf_00000.npy").write_bytes(b"junk")
+    assert latest_step(tmp_path) == 1
+
+
+def test_missing_leaf_raises(tmp_path):
+    save(tmp_path, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        restore(tmp_path, 1, {"a": jnp.zeros(3), "extra": jnp.zeros(2)})

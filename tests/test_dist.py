@@ -1,0 +1,110 @@
+"""Distribution-layer tests.  Sharding *rules* are pure functions of specs +
+mesh shape, so most tests run against a multi-device mesh in a subprocess
+(the main test process keeps the default single CPU device)."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.dist.sharding import param_sharding
+from repro.models.common import ParamSpec
+
+
+def _run(code: str) -> str:
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=16"},
+        cwd="/root/repo",
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_param_rules_multi_device():
+    code = textwrap.dedent("""
+        import jax
+        from repro.configs import get_config
+        from repro.dist.sharding import params_shardings
+        from repro.models import build_model
+
+        mesh = jax.make_mesh((4, 4), ("data", "model"))
+        for arch in ("qwen3_8b", "olmoe_1b_7b", "mamba2_2_7b"):
+            cfg = get_config(arch)
+            model = build_model(cfg)
+            sh = params_shardings(model.specs(), mesh)
+            leaves = jax.tree_util.tree_leaves(sh)
+            def uses(spec, axis):
+                return any(
+                    e == axis or (isinstance(e, tuple) and axis in e)
+                    for e in spec if e is not None
+                )
+            n_model = sum(1 for s in leaves if uses(s.spec, "model"))
+            n_data = sum(1 for s in leaves if uses(s.spec, "data"))
+            assert n_model > 0, arch  # TP actually engaged
+            assert n_data > 0, arch   # FSDP actually engaged
+            print(arch, "ok", n_model, "TP +", n_data, "FSDP of", len(leaves))
+    """)
+    out = _run(code)
+    assert out.count("ok") == 3
+
+
+def test_train_step_runs_sharded():
+    """A real sharded train step on a 4x4 host-device mesh (tiny model)."""
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.train import TrainConfig, Trainer, TrainHParams
+        mesh = jax.make_mesh((4, 4), ("data", "model"))
+        cfg = get_smoke_config("llama3_2_1b")
+        tc = TrainConfig(steps=3, global_batch=8, seq_len=32, prune_begin=100,
+                         hp=TrainHParams(lr=1e-3, total_steps=3), log_every=100)
+        out = Trainer(cfg, tc, mesh=mesh).train()
+        assert np.isfinite(out["final_loss"])
+        print("sharded loss", out["final_loss"])
+    """)
+    out = _run(code)
+    assert "sharded loss" in out
+
+
+def test_sharded_matches_single_device():
+    """Same seed, same data: 16-device mesh loss == single-device loss."""
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.train import TrainConfig, Trainer, TrainHParams
+        tc = TrainConfig(steps=2, global_batch=8, seq_len=16, prune_begin=100,
+                         hp=TrainHParams(lr=1e-3, total_steps=2), log_every=100)
+        cfg = get_smoke_config("qwen2_0_5b")
+        from jax.sharding import Mesh
+        mesh = jax.make_mesh((4, 4), ("data", "model"))
+        l_multi = Trainer(cfg, tc, mesh=mesh).train()["final_loss"]
+        mesh1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        l_single = Trainer(cfg, tc, mesh=mesh1).train()["final_loss"]
+        print("multi", l_multi, "single", l_single)
+        assert abs(l_multi - l_single) < 2e-3, (l_multi, l_single)
+    """)
+    _run(code)
+
+
+def test_param_sharding_divisibility_fallback():
+    """Non-divisible dims must fall back to replication, never error."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = ParamSpec((7, 13), ("embed", "ff"))  # nothing divides
+    s = param_sharding(spec, mesh)
+    assert s.spec == jax.sharding.PartitionSpec(None, None)
+
+
+def test_batch_sharding_non_divisible_batch():
+    from repro.dist.sharding import batch_sharding
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    s = batch_sharding(mesh, batch_size=1, ndim=2)  # long_500k case
+    assert s.spec[0] in (None, "data")  # batch=1 on 1-dev mesh: either is valid

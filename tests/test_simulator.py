@@ -1,0 +1,72 @@
+"""Cycle-model tests: WS analytical formula invariants and the VUSA-vs-
+standard relationships the paper's Tables II/III rest on."""
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import (
+    Gemm,
+    gemm_cycles_standard,
+    gemm_cycles_vusa,
+    model_cycles_standard,
+    model_cycles_vusa,
+    ws_cycles,
+)
+from repro.core.workloads import mobilenetv1_gemms, resnet18_gemms
+
+
+def test_ws_cycles_formula():
+    # fill R + stream B + drain R + C - 2
+    assert ws_cycles(B=1, R=1, C_arr=1) == 2  # 1 load + 1 compute
+    assert ws_cycles(B=10, R=3, C_arr=3) == 2 * 3 + 3 + 10 - 2
+
+
+def test_bigger_array_never_slower():
+    g = Gemm(B=100, K=64, C=64)
+    c = [gemm_cycles_standard(g, 3, m) for m in (3, 4, 5, 6)]
+    assert c[0] > c[1] > c[2] > c[3]
+
+
+def test_vusa_dense_equals_standard_na():
+    """With zero sparsity VUSA degenerates to an N x A standard array."""
+    rng = np.random.default_rng(0)
+    g = Gemm(B=50, K=12, C=24)
+    mask = np.ones((12, 24), dtype=bool)
+    vusa_cycles, _ = gemm_cycles_vusa(g, mask, N=3, M=6, A=3)
+    assert vusa_cycles == gemm_cycles_standard(g, 3, 3)
+
+
+def test_vusa_high_sparsity_approaches_standard_nm():
+    rng = np.random.default_rng(1)
+    g = Gemm(B=50, K=12, C=24)
+    mask = rng.random((12, 24)) > 0.97
+    vusa_cycles, _ = gemm_cycles_vusa(g, mask, N=3, M=6, A=3)
+    std_3x6 = gemm_cycles_standard(g, 3, 6)
+    assert vusa_cycles <= 1.1 * std_3x6
+
+
+def test_vusa_between_bounds():
+    """VUSA cycles always within [standard N x M, standard N x A]."""
+    rng = np.random.default_rng(2)
+    g = Gemm(B=32, K=24, C=30)
+    for sp in (0.3, 0.6, 0.85):
+        mask = rng.random((24, 30)) > (1 - sp) if False else rng.random((24, 30)) < (1 - sp)
+        cycles, _ = gemm_cycles_vusa(g, mask, N=3, M=6, A=3)
+        assert gemm_cycles_standard(g, 3, 6) <= cycles <= gemm_cycles_standard(g, 3, 3)
+
+
+def test_workload_shapes():
+    rg = resnet18_gemms()
+    mg = mobilenetv1_gemms()
+    # ResNet-18: ~1.8 GMACs at 224x224; MobileNetV1: ~0.57 GMACs
+    assert sum(g.macs for g in rg) / 1e9 == pytest.approx(1.81, abs=0.15)
+    assert sum(g.macs for g in mg) / 1e9 == pytest.approx(0.57, abs=0.12)
+
+
+def test_model_cycles_aggregate():
+    gemms = [Gemm(B=10, K=6, C=12), Gemm(B=4, K=3, C=6)]
+    masks = [np.ones((6, 12), bool), np.zeros((3, 6), bool)]
+    stats = model_cycles_vusa(gemms, masks, 3, 6, 3)
+    assert stats.cycles > 0 and stats.jobs > 0
+    split = stats.load_split()
+    assert split.sum() == pytest.approx(1.0)

@@ -1,0 +1,185 @@
+"""Core VUSA algorithm tests: scheduler, MAC assignment (the paper's wiring
+claim), growth model (Eq. 1-4) vs Monte-Carlo, packing roundtrips, and the
+Table-I-calibrated PPA model."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.growth import expected_width_distribution, growth_curves, p_grow, p_row_gain
+from repro.core.hwmodel import TABLE1_PAPER, HwModel, table1
+from repro.core.packing import (
+    pack_blocks,
+    pack_exact,
+    pack_rows,
+    unpack_blocks,
+    unpack_exact,
+    unpack_rows,
+)
+from repro.core.vusa import (
+    load_split,
+    mac_assignment,
+    schedule_matrix,
+    virtual_speedup,
+    window_feasible,
+)
+
+# ---------------------------------------------------------------------------
+# MAC assignment / wiring claim
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(2, 12),
+    a_frac=st.floats(0.2, 1.0),
+    data=st.data(),
+)
+@settings(max_examples=200, deadline=None)
+def test_wiring_claim_any_leq_a_nonzeros_is_feasible(m, a_frac, data):
+    """Paper Section III-C: each MAC connected to M-A+1 adjacent SPEs suffices
+    for ALL distributions of <= A non-zeros in a window of M."""
+    a = max(1, int(round(a_frac * m)))
+    t = data.draw(st.integers(0, a))
+    positions = sorted(data.draw(st.sets(st.integers(0, m - 1), min_size=t, max_size=t)))
+    macs = mac_assignment(positions, m, a)
+    assert macs is not None, (positions, m, a)
+    # injective + in shift range
+    assert len(set(macs.tolist())) == len(positions)
+    for p, j in zip(positions, macs):
+        assert j <= p <= j + (m - a)
+
+
+def test_overflow_is_infeasible():
+    assert mac_assignment([0, 1, 2, 3], M=6, A=3) is None
+
+
+@given(st.integers(1, 6), st.integers(1, 8), st.data())
+@settings(max_examples=100, deadline=None)
+def test_scheduler_windows_always_feasible(n, a, data):
+    m = a + data.draw(st.integers(0, 4))
+    cols = data.draw(st.integers(1, 40))
+    mask = np.array(
+        data.draw(
+            st.lists(st.lists(st.booleans(), min_size=cols, max_size=cols), min_size=n, max_size=n)
+        )
+    )
+    sched = schedule_matrix(mask, n, m, a)
+    for tile_jobs in sched.jobs:
+        covered = 0
+        for job in tile_jobs:
+            assert a <= job.width <= m or job.width == min(m, cols - job.start)
+            assert window_feasible(mask[:, job.start : job.start + job.width], m, a) or (
+                job.width <= a
+            )
+            assert job.start == covered
+            covered += job.width
+        assert covered == cols
+
+
+def test_dense_degenerates_to_na():
+    """No sparsity => every window is width A (the paper's dense fallback)."""
+    mask = np.ones((3, 30), dtype=bool)
+    sched = schedule_matrix(mask, 3, 6, 3)
+    assert all(j.width == 3 for t in sched.jobs for j in t)
+    assert virtual_speedup(sched) == pytest.approx(1.0)
+
+
+def test_full_sparsity_grows_to_m():
+    rng = np.random.default_rng(0)
+    mask = rng.random((9, 60)) > 0.95  # 95% sparse
+    sched = schedule_matrix(mask, 3, 6, 3)
+    split = load_split(sched)
+    assert split[6] > 0.9  # nearly all load at full virtual width
+
+
+# ---------------------------------------------------------------------------
+# Growth model (Eq. 1-4) vs Monte Carlo
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p1,w", [(0.15, 6), (0.4, 5), (0.05, 6), (0.7, 4)])
+def test_growth_formula_vs_monte_carlo(p1, w):
+    n, a = 3, 3
+    rng = np.random.default_rng(1)
+    trials = 4000
+    rows_ok = (rng.random((trials, n, w)) < p1).sum(axis=2) <= a
+    mc = rows_ok.all(axis=1).mean()
+    assert p_grow(n, w, a, p1) == pytest.approx(mc, abs=0.03)
+
+
+def test_growth_monotone_in_sparsity():
+    probs = [p_grow(3, 6, 3, 1 - s) for s in np.linspace(0, 1, 21)]
+    assert all(b >= a - 1e-12 for a, b in zip(probs, probs[1:]))
+
+
+def test_fig6_anchors():
+    """Paper Fig. 6 qualitative anchors."""
+    assert p_grow(3, 6, 3, 1 - 0.9) > 0.95  # >=90% sparsity -> ~1
+    assert p_grow(3, 6, 3, 1 - 0.6) > 0.5  # 60% sparsity -> >50%
+    assert p_grow(3, 4, 3, 1 - 0.35) > 0.5  # ~30-35% -> 3x4 >50%
+
+
+def test_width_distribution_sums_to_one():
+    d = expected_width_distribution(3, 6, 3, 0.15)
+    assert d.sum() == pytest.approx(1.0)
+    assert d[6] == pytest.approx(p_grow(3, 6, 3, 0.15))
+
+
+# ---------------------------------------------------------------------------
+# Packing roundtrips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.9])
+def test_exact_pack_roundtrip(sparsity):
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(12, 30)) * (rng.random((12, 30)) > sparsity)
+    p = pack_exact(w, N=3, M=6, A=3)
+    np.testing.assert_allclose(unpack_exact(p), w)
+
+
+@pytest.mark.parametrize("sparsity", [0.5, 0.95])
+def test_block_pack_roundtrip(sparsity):
+    rng = np.random.default_rng(3)
+    w = (rng.normal(size=(64, 32)) * (rng.random((64, 32)) > sparsity)).astype(np.float32)
+    p = pack_blocks(w, m_blk=16, a_blk=4, tile_n=8)
+    np.testing.assert_allclose(unpack_blocks(p), w)
+
+
+@given(st.floats(0.0, 0.99), st.integers(1, 3))
+@settings(max_examples=20, deadline=None)
+def test_row_pack_roundtrip(sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(32, 130)) * (rng.random((32, 130)) > sparsity)).astype(np.float32)
+    p = pack_rows(w, m=128, a=8)
+    np.testing.assert_allclose(unpack_rows(p), np.pad(w, ((0, 0), (0, 126)))[:, :130])
+
+
+def test_row_pack_byte_ratio_improves_with_sparsity():
+    rng = np.random.default_rng(4)
+    dense = pack_rows((rng.normal(size=(256, 256))).astype(np.float32), a=16)
+    sparse = pack_rows(
+        (rng.normal(size=(256, 256)) * (rng.random((256, 256)) > 0.9)).astype(np.float32), a=16
+    )
+    assert sparse.byte_ratio() < 0.4 < 1.0 <= dense.byte_ratio()
+
+
+# ---------------------------------------------------------------------------
+# PPA model vs Table I
+# ---------------------------------------------------------------------------
+
+
+def test_table1_reproduction():
+    t = table1()
+    for k, (macs, area, power) in t.items():
+        pm, pa, pp = TABLE1_PAPER[k]
+        assert macs == pm
+        assert area == pytest.approx(pa, abs=0.03), k
+        assert power == pytest.approx(pp, abs=0.03), k
+
+
+def test_vusa_cheaper_than_standard_3x6():
+    m = HwModel()
+    assert m.area_vusa(3, 6, 3) < m.area_standard(3, 6)
+    assert m.power_vusa(3, 6, 3) < m.power_standard(3, 6)
