@@ -226,46 +226,117 @@ def fig89_pruning_sweep():
 
 def kernel_vusa_packed():
     """Packed vs dense matmul: HBM byte ratio (the TPU-side VUSA gain) and
-    CPU wall time of the jitted jnp reference implementations."""
+    a before/after of the Pallas kernel's dense-tile reconstruction —
+    "before" is the seed per-slot fori_loop at its default k_blk=256,
+    "after" is the vectorized one-hot contraction with the autotuned k_blk
+    (repro.kernels.ops.choose_k_blk/autotune_row_packed)."""
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels.ops import apply_row_packed_ref, pack_linear_rows
-    from repro.kernels.ref import dense_matmul_ref
+    from repro.kernels.ops import (
+        apply_row_packed,
+        autotune_row_packed,
+        pack_linear_rows,
+    )
+    from repro.kernels.ref import dense_matmul_ref, vusa_packed_ref
+    from repro.kernels.vusa_packed import vusa_packed_matmul
 
     rng = np.random.default_rng(0)
     k = c = 1024
     b = 64
+    iters = 10
     results = {}
     x = jnp.asarray(rng.normal(size=(b, k)), jnp.float32)
+
+    def best_of(f, reps=3):
+        f(x).block_until_ready()  # compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                f(x).block_until_ready()
+            best = min(best, (time.perf_counter() - t0) / iters)
+        return best
+
     for sp in (0.0, 0.5, 0.85, 0.95):
         w = rng.normal(size=(k, c)) * (rng.random((k, c)) > sp)
         w = w.astype(np.float32)
         p = pack_linear_rows(w, a=16)
         wj = jnp.asarray(w)
-        f_dense = jax.jit(lambda x: dense_matmul_ref(x, wj))
-        f_packed = jax.jit(lambda x: apply_row_packed_ref(x, p))
-        f_dense(x).block_until_ready()
-        f_packed(x).block_until_ready()
-        t0 = time.time()
-        for _ in range(20):
-            f_dense(x).block_until_ready()
-        td = (time.time() - t0) / 20
-        t0 = time.time()
-        for _ in range(20):
-            f_packed(x).block_until_ready()
-        tp = (time.time() - t0) / 20
-        results[f"sparsity_{sp}"] = {
+        entry = {
             "byte_ratio": p.byte_ratio,
-            "dense_us": td * 1e6,
-            "packed_us": tp * 1e6,
             "n_jobs": int(p.values.shape[2] // p.a),
         }
+        if sp in (0.85, 0.95):  # wall-time A/B on the interesting points
+            ref = np.asarray(vusa_packed_ref(x, p.values, p.positions))[:, : p.c]
+            got = np.asarray(apply_row_packed(x, p), np.float32)
+            np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+            k_blk = autotune_row_packed(x, p)
+            from repro.kernels.ops import on_tpu
+
+            interp = not on_tpu()  # both arms on the same execution mode
+            f_dense = jax.jit(lambda a: dense_matmul_ref(a, wj))
+            f_before = jax.jit(
+                lambda a: vusa_packed_matmul(
+                    a, p.values, p.positions, m=p.m, k_blk=256,
+                    interpret=interp, reconstruct="loop",
+                )
+            )
+            f_after = jax.jit(lambda a: apply_row_packed(a, p))
+            entry.update(
+                dense_us=best_of(f_dense) * 1e6,
+                kernel_loop_us=best_of(f_before) * 1e6,
+                kernel_vec_us=best_of(f_after) * 1e6,
+                k_blk=k_blk,
+            )
+            entry["kernel_speedup"] = entry["kernel_loop_us"] / entry["kernel_vec_us"]
+        results[f"sparsity_{sp}"] = entry
     _save("kernel_vusa_packed", results)
     r85 = results["sparsity_0.85"]
-    _emit("kernel_vusa_packed", r85["packed_us"],
+    _emit("kernel_vusa_packed", r85["kernel_vec_us"],
           f"byte_ratio@85={r85['byte_ratio']:.3f};jobs@85={r85['n_jobs']};"
+          f"loop_us@85={r85['kernel_loop_us']:.0f};vec_us@85={r85['kernel_vec_us']:.0f};"
+          f"speedup@85={r85['kernel_speedup']:.2f}x;"
           f"byte_ratio@95={results['sparsity_0.95']['byte_ratio']:.3f}")
+
+
+def bench_decode_fused():
+    """Fused on-device decode loop vs the seed per-token host loop: same
+    smoke model, same prompts, greedy — identical tokens required, tokens/s
+    compared (best of 3 after a matched-shape compile warmup)."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+
+    cfg = get_smoke_config("llama3_2_1b")
+    params = build_model(cfg).init(jax.random.key(0))
+    prompts = np.ones((2, 6), np.int32)
+    max_new = 64
+    runs = {}
+    for fused in (False, True):
+        eng = Engine(cfg, params, ServeConfig(max_len=128, fused=fused))
+        eng.generate(prompts, max_new=max_new)  # compile (same steps shape)
+        best = None
+        for _ in range(3):
+            out = eng.generate(prompts, max_new=max_new)
+            if best is None or out["tok_per_s"] > best["tok_per_s"]:
+                best = out
+        runs[fused] = best
+    assert (runs[False]["tokens"] == runs[True]["tokens"]).all(), "fused decode diverged"
+    us = runs[True]["decode_s"] * 1e6  # per-generate decode time of the fused arm
+    speedup = runs[True]["tok_per_s"] / runs[False]["tok_per_s"]
+    _save("bench_decode_fused", {
+        "seed_tok_per_s": runs[False]["tok_per_s"],
+        "fused_tok_per_s": runs[True]["tok_per_s"],
+        "speedup": speedup,
+        "batch": int(prompts.shape[0]),
+        "max_new": max_new,
+    })
+    _emit("bench_decode_fused", us,
+          f"seed_tok_s={runs[False]['tok_per_s']:.0f};"
+          f"fused_tok_s={runs[True]['tok_per_s']:.0f};speedup={speedup:.2f}x")
 
 
 def bench_scheduler():
@@ -368,17 +439,31 @@ def table_lm_vusa():
 # ---------------------------------------------------------------------------
 
 
-def main() -> None:
+BENCHES = {
+    "fig6_growth": fig6_growth,
+    "table1_area_power": table1_area_power,
+    "table2_resnet18": table2_resnet18,
+    "table3_mobilenet": table3_mobilenet,
+    "fig89_pruning_sweep": fig89_pruning_sweep,
+    "table_lm_vusa": table_lm_vusa,
+    "kernel_vusa_packed": kernel_vusa_packed,
+    "bench_scheduler": bench_scheduler,
+    "bench_train_decode": bench_train_decode,
+    "bench_decode_fused": bench_decode_fused,
+}
+
+
+def main(argv=None) -> None:
+    """Run all benchmarks, or only the ones named on the command line
+    (``python benchmarks/run.py kernel_vusa_packed bench_decode_fused``)."""
+    import sys
+
+    names = list(argv if argv is not None else sys.argv[1:]) or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    assert not unknown, f"unknown benchmarks {unknown}; known: {list(BENCHES)}"
     print("name,us_per_call,derived")
-    fig6_growth()
-    table1_area_power()
-    table2_resnet18()
-    table3_mobilenet()
-    fig89_pruning_sweep()
-    table_lm_vusa()
-    kernel_vusa_packed()
-    bench_scheduler()
-    bench_train_decode()
+    for n in names:
+        BENCHES[n]()
 
 
 if __name__ == "__main__":

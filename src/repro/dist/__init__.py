@@ -1,0 +1,8 @@
+from .sharding import (  # noqa: F401
+    act_rules,
+    batch_sharding,
+    batch_shardings,
+    param_sharding,
+    params_shardings,
+    serve_shardings,
+)

@@ -1,0 +1,152 @@
+"""Logical-axis sharding rules: ParamSpec trees -> NamedSharding trees.
+
+One table maps each *logical* axis name (the strings in every
+:class:`repro.models.common.ParamSpec`) to a *mesh* axis.  The policy is the
+standard 2D TP x FSDP layout:
+
+* ``model`` carries tensor/expert parallelism — vocab, ff, attention heads,
+  experts, SSM inner dims are split so each device holds a slice of every
+  layer's wide matmuls;
+* ``data`` carries data parallelism and, for parameters, FSDP — the
+  ``embed`` (d_model) axis of weights is sharded over ``data`` so optimizer
+  state and parameters scale out with the DP degree;
+* an optional ``pod`` axis (multi-pod meshes) is pure data parallelism:
+  parameters are replicated across pods, batches are split.
+
+Every rule degrades gracefully: a dimension is only sharded when the mesh
+axis exists, has size > 1, is not already used by an earlier dimension of
+the same tensor, and divides the dimension evenly.  Anything else falls
+back to replication — never an error (see tests/test_dist.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..models.common import ParamSpec
+
+__all__ = [
+    "act_rules",
+    "param_sharding",
+    "params_shardings",
+    "batch_sharding",
+    "batch_shardings",
+    "serve_shardings",
+]
+
+
+# logical parameter axis -> mesh axis (None = always replicate)
+PARAM_RULES: Dict[str, Optional[str]] = {
+    # tensor parallel (wide matmul dims)
+    "vocab": "model",
+    "ff": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "rglru": "model",
+    # FSDP: shard the shared d_model axis over the data axis
+    "embed": "data",
+    # deliberately replicated (second occurrence of an already-used dim
+    # family, or too small to matter)
+    "rglru_out": None,
+    "embed2": None,
+}
+
+
+def act_rules(mesh) -> Dict[str, object]:
+    """Activation-sharding rules consumed by ``models.common.shard``.
+
+    Activations stay replicated on the embed axis (TP shards the weights and
+    all-reduces the products); the batch axis spans every pure-DP mesh axis.
+    """
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return {
+        "batch": batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None),
+        "ff": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "ssm_inner": "model",
+        "rglru": "model",
+        "embed": None,
+    }
+
+
+def _divisible(dim: int, mesh, axes) -> bool:
+    size = math.prod(mesh.shape[a] for a in axes)
+    return size > 1 and dim % size == 0
+
+
+def param_sharding(spec: ParamSpec, mesh) -> NamedSharding:
+    """NamedSharding for one ParamSpec under PARAM_RULES (with fallback)."""
+    used = set()
+    parts = []
+    for dim, name in zip(spec.shape, spec.axes):
+        axis = PARAM_RULES.get(name) if name else None
+        if (
+            axis is not None
+            and axis in mesh.shape
+            and axis not in used
+            and _divisible(dim, mesh, (axis,))
+        ):
+            parts.append(axis)
+            used.add(axis)
+        else:
+            parts.append(None)
+    return NamedSharding(mesh, PartitionSpec(*parts))
+
+
+def params_shardings(spec_tree, mesh):
+    """Map a ParamSpec tree to a NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s: param_sharding(s, mesh),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_sharding(mesh, batch_size: int, ndim: int) -> NamedSharding:
+    """Shard dim 0 (the batch) over the DP mesh axes, replicate the rest."""
+    axes = _batch_axes(mesh)
+    if ndim == 0 or not axes or not _divisible(batch_size, mesh, axes):
+        return NamedSharding(mesh, PartitionSpec(*([None] * ndim)))
+    first = axes if len(axes) > 1 else axes[0]
+    return NamedSharding(mesh, PartitionSpec(first, *([None] * (ndim - 1))))
+
+
+def batch_shardings(mesh, batch: Dict[str, object]) -> Dict[str, NamedSharding]:
+    """Per-entry batch shardings for a dict of arrays / ShapeDtypeStructs."""
+    return {
+        k: batch_sharding(mesh, v.shape[0] if len(v.shape) else 1, len(v.shape))
+        for k, v in batch.items()
+    }
+
+
+def serve_shardings(cache_tree, mesh, batch_size: int):
+    """Shardings for a decode-cache pytree: shard the batch dim over DP.
+
+    Cache leaves are layer-stacked — the batch dim is whichever of the first
+    two dims equals ``batch_size`` (scalars like ``pos`` stay replicated).
+    """
+    axes = _batch_axes(mesh)
+    first = (axes if len(axes) > 1 else axes[0]) if axes else None
+
+    def one(s):
+        parts = [None] * len(s.shape)
+        if first is not None and _divisible(batch_size, mesh, axes):
+            for i, d in enumerate(s.shape[:2]):
+                if d == batch_size:
+                    parts[i] = first
+                    break
+        return NamedSharding(mesh, PartitionSpec(*parts))
+
+    return jax.tree_util.tree_map(one, cache_tree)

@@ -26,6 +26,12 @@ __all__ = [
     "apply_packed",
     "apply_packed_ref",
     "matmul",
+    "RowPackedLinear",
+    "pack_linear_rows",
+    "apply_row_packed",
+    "apply_row_packed_ref",
+    "choose_k_blk",
+    "autotune_row_packed",
 ]
 
 
@@ -105,9 +111,12 @@ def matmul(x: jax.Array, w: jax.Array, *, interpret: bool | None = None) -> jax.
 # Row-wise (paper-format) packed linear
 # --------------------------------------------------------------------------
 
+import os  # noqa: E402
+import time  # noqa: E402
+
 from ..core.packing import RowPacked, pack_rows  # noqa: E402
 from .ref import vusa_packed_ref  # noqa: E402
-from .vusa_packed import vusa_packed_matmul  # noqa: E402
+from .vusa_packed import DEFAULT_SLOT_CHUNK, vusa_packed_matmul  # noqa: E402
 
 
 @dataclasses.dataclass
@@ -140,17 +149,122 @@ def pack_linear_rows(w: np.ndarray, m: int = 128, a: int = 16) -> RowPackedLinea
     )
 
 
+# -- k_blk / m tuning ------------------------------------------------------
+#
+# The kernel's only free parameters are the K block (bounds the one-hot
+# scratch: k_blk * min(slots, slot_chunk) * m * 4 bytes) and the window
+# width m (fixed at pack time, <= 128).  ``choose_k_blk`` is the heuristic;
+# ``autotune_row_packed`` measures the candidates once per shape and caches
+# the winner so subsequent ``apply_row_packed`` calls use it.
+
+_KBLK_CACHE: dict = {}  # (k, slots, m, b, backend) -> k_blk
+_VMEM_SCRATCH_BUDGET = 2 * 1024 * 1024  # bytes for the one-hot scatter tensor
+
+
+def _kblk_candidates(k: int):
+    c = [blk for blk in (64, 128, 256, 512, 1024) if k % blk == 0 and blk <= k]
+    if k <= 2048 and k not in c:
+        c.append(k)
+    return c or [k]
+
+
+def choose_k_blk(k: int, slots: int, m: int) -> int:
+    """Pick the K block without measuring.
+
+    On TPU the one-hot scatter scratch — k_blk * min(slots, slot_chunk) *
+    m * 4 bytes, since reconstruction runs at most slot_chunk slots per
+    pass — must fit VMEM, so take the largest candidate under the budget.
+    Off-TPU (interpret mode) there is no VMEM wall and fewer, larger grid
+    steps win (measured in benchmarks/run.py kernel_vusa_packed), so take
+    the largest candidate outright.
+    """
+    env = os.environ.get("REPRO_VUSA_KBLK")
+    if env:
+        try:
+            blk = int(env)
+        except ValueError as e:
+            raise ValueError(f"REPRO_VUSA_KBLK must be an integer, got {env!r}") from e
+        blk = max(1, min(blk, k))
+        while k % blk:  # snap down to the largest divisor of k
+            blk -= 1
+        return blk
+    cands = _kblk_candidates(k)
+    if not on_tpu():
+        return cands[-1]
+    best = 1
+    for blk in cands:
+        if blk * min(slots, DEFAULT_SLOT_CHUNK) * m * 4 <= _VMEM_SCRATCH_BUDGET:
+            best = max(best, blk)
+    return best
+
+
+def _tune_key(xf: jax.Array, p: RowPackedLinear, interp: bool):
+    return (
+        xf.shape[-1], p.values.shape[2], p.m, xf.shape[0],
+        str(p.values.dtype), interp, jax.default_backend(),
+    )
+
+
+def autotune_row_packed(
+    x: jax.Array, p: RowPackedLinear, *, interpret: bool | None = None, iters: int = 5
+) -> int:
+    """Time the kernel over k_blk candidates; cache + return the winner."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    xf = x.reshape(-1, x.shape[-1])
+    key = _tune_key(xf, p, interp)
+    if key in _KBLK_CACHE:
+        return _KBLK_CACHE[key]
+    best_blk, best_t = None, float("inf")
+    for blk in _kblk_candidates(xf.shape[-1]):
+        f = lambda a: vusa_packed_matmul(
+            a, p.values, p.positions, m=p.m, k_blk=blk, interpret=interp
+        )
+        f(xf).block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            f(xf).block_until_ready()
+        dt = (time.perf_counter() - t0) / iters
+        if dt < best_t:
+            best_blk, best_t = blk, dt
+    _KBLK_CACHE[key] = best_blk
+    return best_blk
+
+
 def apply_row_packed(
-    x: jax.Array, p: RowPackedLinear, *, interpret: bool | None = None, k_blk: int = 256
+    x: jax.Array,
+    p: RowPackedLinear,
+    *,
+    interpret: bool | None = None,
+    k_blk: int | None = None,
+    reconstruct: str = "onehot",
 ) -> jax.Array:
-    """y = x @ W for row-packed W.  x: (..., K) -> (..., C)."""
+    """y = x @ W for row-packed W.  x: (..., K) -> (..., C).
+
+    ``k_blk=None`` consults the autotune cache (populated by
+    ``autotune_row_packed``), falling back to the ``choose_k_blk`` heuristic.
+    """
     interp = (not on_tpu()) if interpret is None else interpret
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
-    k_blk = min(k_blk, xf.shape[-1])
-    while xf.shape[-1] % k_blk:
+    k = xf.shape[-1]
+    slots = p.values.shape[2]
+    if k_blk is None:
+        if os.environ.get("REPRO_VUSA_KBLK"):  # explicit override beats the cache
+            k_blk = choose_k_blk(k, slots, p.m)
+        else:
+            k_blk = _KBLK_CACHE.get(_tune_key(xf, p, interp)) or choose_k_blk(k, slots, p.m)
+    k_blk = min(k_blk, k)
+    while k % k_blk:
         k_blk //= 2
-    y = vusa_packed_matmul(xf, p.values, p.positions, m=p.m, k_blk=max(k_blk, 1), interpret=interp)
+    y = vusa_packed_matmul(
+        xf,
+        p.values,
+        p.positions,
+        m=p.m,
+        k_blk=max(k_blk, 1),
+        interpret=interp,
+        reconstruct=reconstruct,
+    )
     return y[..., : p.c].reshape(*lead, p.c).astype(x.dtype)
 
 

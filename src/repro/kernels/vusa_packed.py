@@ -1,6 +1,6 @@
 """Pallas TPU kernel: VUSA row-wise packed matmul (the paper's format, exact).
 
-Per output *window* of ``M`` lanes (M = 128, one MXU tile of columns), each
+Per output *window* of ``M`` lanes (M <= 128, one MXU tile of columns), each
 reduction row ``k`` stores at most ``A`` non-zero weights as ``A`` value
 slots + ``A`` int8 *position* slots — precisely the paper's VUSA row: the
 positions are the SPE indices the physical MACs are shifted onto (Fig. 5).
@@ -14,13 +14,28 @@ in the paper — is what must be *moved* for a given logical matmul: HBM
 weight bytes shrink from ``K*M*dtype`` to ``K*J*A*(dtype + 1)``.  At 85 %
 sparsity with (M=128, A=16, J=2) that is ~2.4x less weight traffic, which is
 the whole game for memory-bound decode (Edge-AI inference, the paper's
-target).  The kernel reconstructs the dense tile in VMEM with ``A*J``
-VPU select-accumulate passes (iota==pos one-hot), then issues the dense
-MXU matmul — HBM never sees the zeros.
+target).
+
+Dense-tile reconstruction (DESIGN.md §3) has two implementations, selected
+by the static ``reconstruct`` argument:
+
+* ``"onehot"`` (default) — a single vectorized contraction over all ``J*A``
+  slots at once: ``positions == lanes[..., None]`` builds the one-hot
+  scatter tensor and one multiply-reduce produces the dense (K_blk, M)
+  tile.  One VPU pass regardless of slot count; this is the fast path.
+* ``"loop"`` — the original per-slot ``fori_loop`` select-accumulate
+  (``J*A`` sequential VPU passes).  Kept as the measured baseline for
+  ``benchmarks/run.py kernel_vusa_packed``.
+
+Values may be fp32 or bf16; accumulation is always fp32 (both the one-hot
+contraction and the MXU matmul run with ``preferred_element_type=float32``)
+and the kernel output is fp32.
 
 Grid: (output windows, K blocks); K innermost for output-block accumulation.
 VMEM per step: x (B, K_blk), vals (K_blk, J*A), pos (K_blk, J*A),
-reconstructed W (K_blk, 128) fp32, acc (B, 128) fp32.
+one-hot scratch (K_blk, J*A, M) for "onehot", reconstructed W (K_blk, M)
+fp32, acc (B, M) fp32.  ``k_blk`` is the knob that bounds the scratch —
+see ``repro.kernels.ops.choose_k_blk``.
 """
 
 from __future__ import annotations
@@ -31,30 +46,65 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["vusa_packed_matmul"]
+__all__ = ["vusa_packed_matmul", "RECONSTRUCT_MODES", "DEFAULT_SLOT_CHUNK"]
+
+RECONSTRUCT_MODES = ("onehot", "loop")
+DEFAULT_SLOT_CHUNK = 24  # slots per one-hot pass; bounds the scatter scratch
 
 
-def _kernel(x_ref, val_ref, pos_ref, y_ref, *, m: int):
-    _, k_blk, slots = val_ref.shape
+def _reconstruct_onehot(vals, pos, m: int, slot_chunk: int):
+    """Vectorized scatter: slots in wide select-reduce chunks.
 
+    vals: (K_blk, S) fp32, pos: (K_blk, S) int32 (-1 = idle slot).
+    Returns the dense (K_blk, M) tile in fp32.  Idle slots compare unequal
+    to every lane, so they contribute exact zeros.  ``slot_chunk`` bounds
+    the (K_blk, chunk, M) scatter tensor; the chunk loop is a static
+    unroll, so a chunk covering all S slots is a single VPU pass.
+    """
+    k_blk, s = vals.shape
+    chunk = min(slot_chunk, s)
+    w = jnp.zeros((k_blk, m), jnp.float32)
+    for s0 in range(0, s, chunk):
+        width = min(chunk, s - s0)
+        v = jax.lax.dynamic_slice_in_dim(vals, s0, width, axis=1)
+        q = jax.lax.dynamic_slice_in_dim(pos, s0, width, axis=1)
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (k_blk, width, m), 2)
+        w += jnp.sum(jnp.where(q[..., None] == lanes, v[..., None], 0.0), axis=1)
+    return w
+
+
+def _reconstruct_loop(vals, pos, m: int):
+    """Seed baseline: one VPU select-accumulate pass per slot."""
+    k_blk, slots = vals.shape
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (k_blk, m), 1)
+
+    def slot(a, w):
+        v = jax.lax.dynamic_slice_in_dim(vals, a, 1, axis=1)  # (K_blk, 1)
+        p = jax.lax.dynamic_slice_in_dim(pos, a, 1, axis=1)
+        return w + jnp.where(lanes == p, v, 0.0)
+
+    return jax.lax.fori_loop(0, slots, slot, jnp.zeros((k_blk, m), jnp.float32))
+
+
+def _kernel(x_ref, val_ref, pos_ref, y_ref, *, m: int, reconstruct: str, slot_chunk: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (k_blk, m), 1)
-
-    def slot(a, w):
-        vals = val_ref[0, :, a][:, None].astype(jnp.float32)  # (K_blk, 1)
-        pos = pos_ref[0, :, a][:, None].astype(jnp.int32)  # (K_blk, 1)
-        return w + jnp.where(lanes == pos, vals, 0.0)  # scatter into lanes
-
-    w = jax.lax.fori_loop(0, slots, slot, jnp.zeros((k_blk, m), jnp.float32))
+    vals = val_ref[0].astype(jnp.float32)  # (K_blk, S)
+    pos = pos_ref[0].astype(jnp.int32)
+    if reconstruct == "onehot":
+        w = _reconstruct_onehot(vals, pos, m, slot_chunk)
+    else:
+        w = _reconstruct_loop(vals, pos, m)
     y_ref[...] += jnp.dot(
         x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
     ).astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "k_blk", "m"))
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "k_blk", "m", "reconstruct", "slot_chunk")
+)
 def vusa_packed_matmul(
     x: jax.Array,  # (B, K)
     values: jax.Array,  # (T, K, J*A)  per window: A slots x J jobs per row
@@ -63,15 +113,19 @@ def vusa_packed_matmul(
     m: int = 128,
     k_blk: int = 256,
     interpret: bool = True,
+    reconstruct: str = "onehot",
+    slot_chunk: int = DEFAULT_SLOT_CHUNK,
 ) -> jax.Array:
     b, k = x.shape
     t, kk, slots = values.shape
     assert kk == k, (kk, k)
+    assert m <= 128, m  # int8 positions index lanes within one MXU tile
+    assert reconstruct in RECONSTRUCT_MODES, reconstruct
     k_blk = min(k_blk, k)
     assert k % k_blk == 0, (k, k_blk)
     grid = (t, k // k_blk)
     return pl.pallas_call(
-        functools.partial(_kernel, m=m),
+        functools.partial(_kernel, m=m, reconstruct=reconstruct, slot_chunk=slot_chunk),
         grid=grid,
         in_specs=[
             pl.BlockSpec((b, k_blk), lambda i, l: (0, l)),

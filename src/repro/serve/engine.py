@@ -1,13 +1,23 @@
 """Serving engine: batched prefill + decode with per-family caches, greedy /
 temperature sampling, and optional VUSA-packed MLP execution (the paper's
 technique on the inference path, where weight-byte savings pay off).
+
+The decode loop is *fused on device* (DESIGN.md §4): one jitted
+``lax.scan`` steps the model ``max_new - 1`` times, deriving per-token
+sampling keys on device and stacking tokens into a pre-allocated output
+buffer, so generation costs a single dispatch and a single
+``block_until_ready`` — no per-token host round-trip.  The seed per-token
+host loop is kept behind ``ServeConfig.fused = False`` as the measured
+baseline (benchmarks/run.py bench_decode_fused) and as a parity oracle:
+both paths split the PRNG key identically, so for a fixed seed they emit
+identical tokens.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +37,7 @@ class ServeConfig:
     packed_mlp: bool = False  # run MLP matmuls VUSA-packed (dense family)
     vusa_m: int = 128  # window lanes (kernel tile)
     vusa_a: int = 16   # physical slots per row per job
+    fused: bool = True  # on-device lax.scan decode loop (False = seed host loop)
 
 
 class Engine:
@@ -40,6 +51,8 @@ class Engine:
 
             self._packed = pack_lm_mlps(cfg, params, sc.vusa_m, sc.vusa_a)
         self._decode = jax.jit(self._decode_fn)
+        self._decode_loop = jax.jit(self._decode_loop_fn, static_argnums=(4,))
+        self._prime_loop = jax.jit(self._prime_loop_fn)
         self._prefill = jax.jit(self._prefill_fn) if cfg.family in (
             "dense", "moe", "vlm", "encdec") else None
 
@@ -60,6 +73,39 @@ class Engine:
             nxt = jnp.argmax(logits, axis=-1)
         return nxt.astype(jnp.int32)[:, None], cache
 
+    def _decode_loop_fn(self, params, token, cache, key, steps: int):
+        """Fused decode: ``steps`` model steps in one on-device scan.
+
+        The scan's stacked output is the pre-allocated (steps, B) token
+        buffer; sampling keys are split on device each step, mirroring the
+        host loop's ``jax.random.split`` sequence exactly.
+        """
+
+        def body(carry, _):
+            token, cache, key = carry
+            key, sub = jax.random.split(key)
+            token, cache = self._decode_fn(params, token, cache, sub)
+            return (token, cache, key), token[:, 0]
+
+        (token, cache, key), toks = jax.lax.scan(
+            body, (token, cache, key), None, length=steps
+        )
+        return toks.T, token, cache, key  # (B, steps)
+
+    def _prime_loop_fn(self, params, prompts, cache, key):
+        """Recurrent-family prompt priming: scan the prompt through decode
+        steps on device (state capture is O(1) per token)."""
+
+        def body(carry, tok):
+            _, cache, key = carry
+            key, sub = jax.random.split(key)
+            nxt, cache = self._decode_fn(params, tok[:, None], cache, sub)
+            return (nxt, cache, key), None
+
+        init = (prompts[:, :1], cache, key)
+        (nxt, cache, key), _ = jax.lax.scan(body, init, prompts.T)
+        return nxt, cache, key
+
     def _prefill_fn(self, params, batch):
         return self.model.prefill(params, batch, self.sc.max_len)
 
@@ -75,24 +121,36 @@ class Engine:
         if self._prefill is not None:
             logits, cache = self._prefill(self.params, batch)
             nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)[:, None].astype(jnp.int32)
+        elif self.sc.fused:
+            cache = self.model.init_cache(b, self.sc.max_len)
+            nxt, cache, key = self._prime_loop(self.params, jnp.asarray(prompts), cache, key)
         else:
-            # recurrent families: prime the state by stepping through the prompt
+            # seed path: prime the state by stepping through the prompt
             cache = self.model.init_cache(b, self.sc.max_len)
             nxt = prompts[:, :1]
             for t in range(s):
                 key, sub = jax.random.split(key)
                 nxt, cache = self._decode(self.params, jnp.asarray(prompts[:, t : t + 1]), cache, sub)
+        jax.block_until_ready(nxt)
         t_prefill = time.time() - t0
 
-        out = [np.asarray(nxt)]
         t0 = time.time()
-        for _ in range(max_new - 1):
-            key, sub = jax.random.split(key)
-            nxt, cache = self._decode(self.params, nxt, cache, sub)
-            out.append(np.asarray(nxt))
-        jax.block_until_ready(nxt)
-        t_decode = time.time() - t0
-        tokens = np.concatenate(out, axis=1)
+        if self.sc.fused:
+            toks, last, cache, key = self._decode_loop(
+                self.params, nxt, cache, key, max_new - 1
+            )
+            jax.block_until_ready(toks)
+            t_decode = time.time() - t0
+            tokens = np.concatenate([np.asarray(nxt), np.asarray(toks)], axis=1)
+        else:
+            out = [np.asarray(nxt)]
+            for _ in range(max_new - 1):
+                key, sub = jax.random.split(key)
+                nxt, cache = self._decode(self.params, nxt, cache, sub)
+                out.append(np.asarray(nxt))
+            jax.block_until_ready(nxt)
+            t_decode = time.time() - t0
+            tokens = np.concatenate(out, axis=1)
         return {
             "tokens": tokens,
             "prefill_s": t_prefill,

@@ -51,13 +51,9 @@ def pack_lm_mlps(cfg: ArchConfig, params, m: int = 128, a: int = 16) -> Dict:
             "k": packs[0].k,
             "c": packs[0].c,
             "m": packs[0].m,
+            "a": a,
         }
     return out
-
-
-def _packed_apply(x, pk, a: int):
-    p = RowPackedLinear(values=pk["values"], positions=pk["positions"], k=pk["k"], c=pk["c"], a=a)
-    return apply_row_packed(x, p)
 
 
 def lm_decode_step_packed(params, packed, token, cache, cfg):
@@ -68,11 +64,14 @@ def lm_decode_step_packed(params, packed, token, cache, cfg):
 
     from ..models.layers import attention_decode  # noqa: PLC0415
 
-    meta = {n: (packed[n]["k"], packed[n]["c"], packed[n]["m"]) for n in ("w_gate", "w_up", "w_down")}
+    meta = {
+        n: (packed[n]["k"], packed[n]["c"], packed[n]["m"], packed[n]["a"])
+        for n in ("w_gate", "w_up", "w_down")
+    }
 
     def papply(name, vals, poss, x2):
-        k, c, m = meta[name]
-        p = RowPackedLinear(values=vals, positions=poss, k=k, c=c, a=16, m=m)
+        k, c, m, a = meta[name]
+        p = RowPackedLinear(values=vals, positions=poss, k=k, c=c, a=a, m=m)
         return apply_row_packed(x2, p)
 
     def body(x, layer_in):

@@ -5,9 +5,12 @@ mesh shape, so most tests run against a multi-device mesh in a subprocess
 import subprocess
 import sys
 import textwrap
+from pathlib import Path
 
 import jax
 import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 from repro.configs import get_config
 from repro.dist.sharding import param_sharding
@@ -21,8 +24,11 @@ def _run(code: str) -> str:
         text=True,
         timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             # pin the backend: without it, plugin discovery in the bare
+             # subprocess env can stall for minutes probing accelerators
+             "JAX_PLATFORMS": "cpu",
              "XLA_FLAGS": "--xla_force_host_platform_device_count=16"},
-        cwd="/root/repo",
+        cwd=str(REPO_ROOT),
     )
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout

@@ -1,0 +1,140 @@
+"""Fused on-device decode loop: parity with the seed per-token host loop,
+packed-vs-dense logits parity across dtypes, and vusa_a plumbing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.pruning import prune_tree
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig
+
+
+def _params(cfg, seed=0):
+    return build_model(cfg).init(jax.random.key(seed))
+
+
+# ---------------------------------------------------------------------------
+# fused loop == seed host loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "mamba2_2_7b", "recurrentgemma_9b"])
+def test_fused_matches_seed_loop_greedy(arch):
+    """Same seed, greedy: the lax.scan loop must emit the seed loop's exact
+    tokens (prefill families and recurrent prompt-priming families both)."""
+    cfg = get_smoke_config(arch)
+    params = _params(cfg)
+    prompts = np.ones((2, 6), np.int32)
+    outs = {}
+    for fused in (False, True):
+        eng = Engine(cfg, params, ServeConfig(max_len=64, fused=fused))
+        outs[fused] = eng.generate(prompts, max_new=12)["tokens"]
+    np.testing.assert_array_equal(outs[False], outs[True])
+
+
+def test_fused_matches_seed_loop_sampled():
+    """The fused loop splits PRNG keys in the host loop's exact order, so
+    even temperature sampling is bit-identical."""
+    cfg = get_smoke_config("llama3_2_1b")
+    params = _params(cfg)
+    prompts = np.ones((3, 5), np.int32)
+    outs = {}
+    for fused in (False, True):
+        eng = Engine(cfg, params, ServeConfig(max_len=64, fused=fused, temperature=1.0))
+        outs[fused] = eng.generate(prompts, max_new=10)["tokens"]
+    np.testing.assert_array_equal(outs[False], outs[True])
+
+
+def test_fused_tok_s_smoke():
+    """tok/s smoke: fused decode must produce identical tokens and not be
+    slower than the per-token host loop (after a matched-shape warmup)."""
+    cfg = get_smoke_config("llama3_2_1b")
+    params = _params(cfg)
+    prompts = np.ones((2, 6), np.int32)
+    max_new = 48
+    best = {}
+    toks = {}
+    for fused in (False, True):
+        eng = Engine(cfg, params, ServeConfig(max_len=64, fused=fused))
+        eng.generate(prompts, max_new=max_new)  # compile
+        best[fused] = max(
+            eng.generate(prompts, max_new=max_new)["tok_per_s"] for _ in range(3)
+        )
+        toks[fused] = eng.generate(prompts, max_new=max_new)["tokens"]
+    np.testing.assert_array_equal(toks[False], toks[True])
+    # loose smoke bound (noisy CI runners): the fused loop must not be
+    # meaningfully slower; the real A/B lives in benchmarks/run.py
+    assert best[True] > 0.5 * best[False], (best[True], best[False])
+
+
+# ---------------------------------------------------------------------------
+# packed decode: logits parity across dtypes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,tol", [("float32", 2e-4), ("bfloat16", 5e-2)])
+def test_packed_logits_parity_dtypes(dtype, tol):
+    """VUSA-packed MLP decode step == dense decode step at dtype tolerance."""
+    from repro.models.families import lm_decode_step
+    from repro.serve.packed import lm_decode_step_packed, pack_lm_mlps
+
+    cfg = dataclasses.replace(get_smoke_config("vusa_edge"), dtype=dtype)
+    params = prune_tree(_params(cfg), 0.85)
+    packed = pack_lm_mlps(cfg, params, m=128, a=16)
+    b = 2
+    model = build_model(cfg)
+    cache = model.init_cache(b, 16)
+    token = jnp.ones((b, 1), jnp.int32)
+    logits_d, _ = jax.jit(lambda p, t, c: lm_decode_step(p, t, c, cfg))(params, token, cache)
+    logits_p, _ = jax.jit(lambda p, t, c: lm_decode_step_packed(p, packed, t, c, cfg))(
+        params, token, cache
+    )
+    scale = float(jnp.max(jnp.abs(logits_d.astype(jnp.float32)))) + 1e-6
+    err = float(jnp.max(jnp.abs(logits_d.astype(jnp.float32) - logits_p.astype(jnp.float32))))
+    assert err / scale < tol, (err, scale)
+
+
+def test_fused_packed_engine_matches_dense_engine():
+    """End to end through Engine: packed + fused == dense + fused tokens."""
+    cfg = get_smoke_config("vusa_edge")
+    params = prune_tree(_params(cfg), 0.85)
+    prompts = np.ones((2, 8), np.int32)
+    dense = Engine(cfg, params, ServeConfig(max_len=64)).generate(prompts, max_new=8)
+    packed = Engine(cfg, params, ServeConfig(max_len=64, packed_mlp=True)).generate(
+        prompts, max_new=8
+    )
+    np.testing.assert_array_equal(dense["tokens"], packed["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# vusa_a plumbing (regression: papply used to hardcode a=16)
+# ---------------------------------------------------------------------------
+
+
+def test_vusa_a_is_plumbed_through_pack_metadata():
+    from repro.serve.packed import pack_lm_mlps
+
+    cfg = get_smoke_config("vusa_edge")
+    params = prune_tree(_params(cfg), 0.85)
+    packed = pack_lm_mlps(cfg, params, m=128, a=8)
+    for name in ("w_gate", "w_up", "w_down"):
+        assert packed[name]["a"] == 8
+        # slots axis is a whole number of a-wide jobs
+        assert packed[name]["values"].shape[-1] % 8 == 0
+
+
+def test_engine_respects_vusa_a():
+    """A non-default vusa_a must reach the packer and still serve exactly."""
+    cfg = get_smoke_config("vusa_edge")
+    params = prune_tree(_params(cfg), 0.85)
+    prompts = np.ones((2, 6), np.int32)
+    dense = Engine(cfg, params, ServeConfig(max_len=64)).generate(prompts, max_new=6)
+    eng = Engine(cfg, params, ServeConfig(max_len=64, packed_mlp=True, vusa_a=8))
+    assert eng._packed["w_gate"]["a"] == 8
+    packed = eng.generate(prompts, max_new=6)
+    np.testing.assert_array_equal(dense["tokens"], packed["tokens"])

@@ -4,8 +4,7 @@ Table-I-calibrated PPA model."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.growth import expected_width_distribution, growth_curves, p_grow, p_row_gain
 from repro.core.hwmodel import TABLE1_PAPER, HwModel, table1
