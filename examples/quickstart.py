@@ -48,7 +48,8 @@ def main():
         v = packed_eng._packed[name]["values"]
         total_packed += v.size * (v.dtype.itemsize + 1)
         total_dense += (
-            v.shape[0] * packed_eng._packed[name]["k"] * packed_eng._packed[name]["c"] * v.dtype.itemsize
+            v.shape[0] * packed_eng._packed[name]["k"] * packed_eng._packed[name]["c"]
+            * v.dtype.itemsize
         )
     print(f"MLP weight bytes: packed/dense = {total_packed / total_dense:.3f}")
     print(

@@ -7,7 +7,6 @@ Run:  PYTHONPATH=src python examples/serve_sparse.py --sparsity 0.85
 """
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -44,7 +43,9 @@ def main():
             for name in ("w_gate", "w_up", "w_down"):
                 v = eng._packed[name]["values"]
                 total_packed += v.size * (v.dtype.itemsize + 1)
-                total_dense += v.shape[0] * eng._packed[name]["k"] * eng._packed[name]["c"] * v.dtype.itemsize
+                total_dense += (
+                    v.shape[0] * eng._packed[name]["k"] * eng._packed[name]["c"] * v.dtype.itemsize
+                )
             print(f"             weight bytes packed/dense = {total_packed/total_dense:.3f} "
                   f"@ {args.sparsity:.0%} sparsity")
             tokens_packed = out["tokens"]
@@ -52,6 +53,24 @@ def main():
             tokens_dense = out["tokens"]
     assert (tokens_dense == tokens_packed).all(), "packed serving diverged!"
     print("outputs identical: True")
+
+    # continuous batching over ragged traffic (DESIGN.md §5): same packed
+    # engine, per-request budgets/seeds, slots backfilled as requests retire
+    from repro.serve import Request, Scheduler
+
+    eng = Engine(cfg, params, ServeConfig(max_len=128, packed_mlp=True))
+    sched = Scheduler(eng, slots=args.batch, segment=8)
+    rng = np.random.default_rng(0)
+    budget_cap = 128 - 8 - 8  # max_len - longest prompt - segment
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab, 4 + 2 * (i % 3)).astype(np.int32),
+                max_new=int(rng.integers(4, min(2 * args.new, budget_cap) + 1)), seed=i)
+        for i in range(2 * args.batch)
+    ]
+    done = sched.run(reqs)
+    s = sched.stats()
+    print(f"scheduler  : {len(done)} requests  {s['sustained_tok_per_s']:6.0f} tok/s  "
+          f"p95 {s['latency_p95_s']*1e3:.0f}ms  occupancy {s['slot_occupancy']:.2f}")
 
 
 if __name__ == "__main__":

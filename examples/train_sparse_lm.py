@@ -13,7 +13,6 @@ import time
 from pathlib import Path
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.pruning import tree_sparsity
 from repro.train import TrainConfig, Trainer, TrainHParams
 
 

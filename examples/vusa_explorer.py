@@ -8,8 +8,6 @@ Run:  PYTHONPATH=src python examples/vusa_explorer.py --sparsity 0.85
 
 import argparse
 
-import numpy as np
-
 from repro.core.growth import expected_width_distribution
 from repro.core.hwmodel import HwModel
 from repro.core.simulator import ws_cycles

@@ -89,7 +89,10 @@ class ArchConfig:
         if self.family == "hybrid":
             n_attn = sum(1 for b in self._pattern() if b == "attn")
             n_rec = L - n_attn
-            rec = d * (2 * self.rglru_dim) + self.rglru_dim * d + 2 * self.rglru_dim * self.rglru_dim // 1
+            rec = (
+                d * (2 * self.rglru_dim) + self.rglru_dim * d
+                + 2 * self.rglru_dim * self.rglru_dim // 1
+            )
             body = n_attn * (attn + ffn) + n_rec * (rec + ffn)
         if self.family == "encdec":
             body = self.enc_layers * (attn + ffn) + L * (2 * attn + ffn)

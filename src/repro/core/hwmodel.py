@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
 __all__ = ["HwModel", "TABLE1_PAPER", "table1"]
 

@@ -16,7 +16,6 @@ Two granularities:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import List, Tuple
 
 import numpy as np

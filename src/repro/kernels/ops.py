@@ -8,7 +8,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ import numpy as np
 
 from ..core.packing import BlockPacked, pack_blocks
 from .dense_matmul import dense_matmul
-from .ref import dense_matmul_ref, vusa_spmm_ref
+from .ref import vusa_spmm_ref
 from .vusa_spmm import vusa_spmm
 
 __all__ = [

@@ -164,8 +164,9 @@ def lower_cell(arch: str, shape_name: str, mesh, rules, variant: str = "baseline
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     if os.environ.get("DRYRUN_PRINT", "1") != "0":
-        print(mem)    # proves it fits
-        print({k: v for k, v in (cost or {}).items() if k in ("flops", "bytes accessed", "transcendentals")})
+        print(mem)  # proves it fits
+        keep = ("flops", "bytes accessed", "transcendentals")
+        print({k: v for k, v in (cost or {}).items() if k in keep})
     hlo_text = compiled.as_text()
     # keep the optimized HLO for hillclimb diffing / re-analysis
     import gzip

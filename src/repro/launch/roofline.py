@@ -130,7 +130,10 @@ def main():
         print("\nWorst roofline fraction:")
         for r in ok[:5]:
             print(f"  {r['arch']:22s} {r['shape']:12s} frac={r['roofline_frac']:.4f} dom={r['dominant']}")
-        coll = sorted(ok, key=lambda r: -(r["collective_s"] / max(max(r["compute_s"], r["memory_s"]), 1e-12)))
+        coll = sorted(
+            ok,
+            key=lambda r: -(r["collective_s"] / max(max(r["compute_s"], r["memory_s"]), 1e-12)),
+        )
         print("\nMost collective-bound:")
         for r in coll[:5]:
             print(f"  {r['arch']:22s} {r['shape']:12s} coll={r['collective_s']:.4f}s vs "

@@ -1,0 +1,63 @@
+"""Slot-cache helpers for continuous-batching serving.
+
+The scheduler (serve/scheduler.py) keeps one independent B=1 decode cache
+per in-flight slot, stacked on a leading ``slots`` axis, and steps them with
+``jax.vmap`` over that axis.  Because every slot carries its *own* scalar
+``pos`` leaf, slots can sit at ragged sequence positions — the property that
+lets retired slots be re-primed mid-stream without touching their
+neighbours.  These helpers are family-agnostic pytree ops over the cache
+trees defined by :mod:`repro.models.families` (every family's
+``*_cache_specs`` works unchanged).
+
+All helpers preserve leaf dtypes (e.g. the hybrid family's fp32 ``h`` state
+next to bf16 KV rings) and never assume a particular tree structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_slot_cache",
+    "read_slot",
+    "write_slot",
+    "reset_slot",
+    "slot_count",
+]
+
+
+def init_slot_cache(cache_specs, slots: int):
+    """Zero-initialised slot-stacked cache: each leaf gains a leading
+    ``slots`` axis over the per-slot (B=1) shape described by
+    ``cache_specs`` (a ShapeDtypeStruct tree from ``Model.cache_specs``)."""
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros((slots,) + s.shape, s.dtype), cache_specs
+    )
+
+
+def slot_count(slot_cache) -> int:
+    """Number of slots in a slot-stacked cache."""
+    return jax.tree_util.tree_leaves(slot_cache)[0].shape[0]
+
+
+def read_slot(slot_cache, i: int):
+    """Extract slot ``i`` as a standalone per-slot (B=1) cache."""
+    return jax.tree_util.tree_map(lambda leaf: leaf[i], slot_cache)
+
+
+def write_slot(slot_cache, i: int, sub_cache):
+    """Return a slot-stacked cache with slot ``i`` replaced by ``sub_cache``
+    (a per-slot cache, e.g. fresh out of prefill)."""
+    return jax.tree_util.tree_map(
+        lambda leaf, sub: leaf.at[i].set(sub.astype(leaf.dtype)), slot_cache, sub_cache
+    )
+
+
+def reset_slot(slot_cache, i: int):
+    """Zero slot ``i`` in place (functionally): KV rows, recurrent states and
+    the slot's ``pos`` all return to the init state, so the next admitted
+    request starts from a clean cache."""
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf.at[i].set(jnp.zeros(leaf.shape[1:], leaf.dtype)), slot_cache
+    )

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -78,8 +78,8 @@ def abstract_params(spec_tree):
 # Activation sharding context
 # --------------------------------------------------------------------------
 
-import contextlib
-import threading
+import contextlib  # noqa: E402  (section-local deps, kept with their code)
+import threading  # noqa: E402
 
 _ctx = threading.local()
 

@@ -17,15 +17,13 @@ Layer parameters carry a leading "layers" axis and run under ``lax.scan``
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import ssm as ssm_mod
-from .common import ParamSpec, abstract_params, init_params, rms_norm, shard
+from .common import ParamSpec, rms_norm, shard
 from .layers import (
     MaskSpec,
     attention,

@@ -9,7 +9,6 @@ are consumed through ``jax.lax.scan`` by the model families.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -101,7 +100,7 @@ class MaskSpec:
 
 _NEG_INF = -1e30
 
-from .opt_flags import FLAGS  # beyond-paper perf switches (see §Perf)
+from .opt_flags import FLAGS  # noqa: E402  beyond-paper perf switches (see §Perf)
 
 
 def _flash_attend(
@@ -235,7 +234,9 @@ def _flash_fwd_chunks(q, k, v, mask, q_pos, k_pos, kv_valid, q_chunk, kv_chunk):
         m0 = jnp.full((b, kvh, g, q_chunk), _NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, kvh, g, q_chunk, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks.swapaxes(0, 1), vs.swapaxes(0, 1), kps, valid))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (ks.swapaxes(0, 1), vs.swapaxes(0, 1), kps, valid)
+        )
         out = acc / jnp.maximum(l, 1e-30)[..., None]
         return None, (out.transpose(0, 3, 1, 2, 4), m, l)  # (b,qc,kvh,g,hd)
 
@@ -277,7 +278,9 @@ def _make_flash_vjp(mask, q_chunk, kv_chunk):
         kps = k_pos.reshape(nk, kv_chunk)
         valid = kv_valid.reshape(nk, kv_chunk)
         # D_i = rowsum(dO * O): (nq, b, kvh, g, q_chunk)
-        ds_stat = jnp.einsum("nbqhgd,nbqhgd->nbhgq", dos.astype(jnp.float32), outs.astype(jnp.float32))
+        ds_stat = jnp.einsum(
+            "nbqhgd,nbqhgd->nbhgq", dos.astype(jnp.float32), outs.astype(jnp.float32)
+        )
 
         def kv_step(dq_acc, kc):
             ki, vi, kp, va = kc
@@ -285,11 +288,15 @@ def _make_flash_vjp(mask, q_chunk, kv_chunk):
             def q_step(carry, qc):
                 dkj, dvj = carry
                 qi, doi, m, l, di, qp, dqi_prev = qc
-                s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, ki, preferred_element_type=jnp.float32) * scale
+                s = scale * jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", qi, ki, preferred_element_type=jnp.float32
+                )
                 allow = mask(qp, kp) & va[None, :]
                 s = jnp.where(allow[None, None, None], s, _NEG_INF)
                 p = jnp.exp(s - m[..., None]) / jnp.maximum(l, 1e-30)[..., None]
-                dp = jnp.einsum("bqhgd,bkhd->bhgqk", doi.astype(jnp.float32), vi.astype(jnp.float32))
+                dp = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", doi.astype(jnp.float32), vi.astype(jnp.float32)
+                )
                 dsv = p * (dp - di[..., None]) * scale
                 if FLAGS["attn_bf16_probs"]:
                     pc, dc = p.astype(jnp.bfloat16), dsv.astype(jnp.bfloat16)

@@ -5,7 +5,7 @@ the family implementations in :mod:`repro.models.families`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +80,29 @@ class Model:
         return jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype), self.cache_specs(batch, max_len)
         )
+
+    # ---- slot caches (continuous batching; see serve/scheduler.py) ----
+    def init_slot_cache(self, slots: int, max_len: int):
+        """Slot-stacked decode cache: ``slots`` independent B=1 caches with a
+        leading slot axis, each with its own scalar ``pos``."""
+        from .cache import init_slot_cache
+
+        return init_slot_cache(self.cache_specs(1, max_len), slots)
+
+    def write_slot(self, slot_cache, i: int, sub_cache):
+        from .cache import write_slot
+
+        return write_slot(slot_cache, i, sub_cache)
+
+    def reset_slot(self, slot_cache, i: int):
+        from .cache import reset_slot
+
+        return reset_slot(slot_cache, i)
+
+    def read_slot(self, slot_cache, i: int):
+        from .cache import read_slot
+
+        return read_slot(slot_cache, i)
 
     def decode_step(self, params, token, cache):
         fam = self.cfg.family

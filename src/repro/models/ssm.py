@@ -9,12 +9,12 @@
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .common import ParamSpec, rms_norm, shard
+from .common import ParamSpec, rms_norm
 from .opt_flags import FLAGS
 
 # --------------------------------------------------------------------------
@@ -136,7 +136,8 @@ def mamba2_block(p: dict, x: jax.Array, cfg) -> jax.Array:
         c_mat.astype(jnp.float32),
         chunk,
     )
-    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xin.reshape(bsz, s, h, hp).astype(jnp.float32)
+    xr = xin.reshape(bsz, s, h, hp).astype(jnp.float32)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xr
     y = y.reshape(bsz, s, din).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["norm"])
     return y @ p["out_proj"].astype(x.dtype)

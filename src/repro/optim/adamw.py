@@ -61,7 +61,9 @@ def adamw_update(
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
 
     flat = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
-    new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree_util.tree_map(
+        lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple)
+    )
     new_mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
     new_nu = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
     return new_params, AdamState(step=step, mu=new_mu, nu=new_nu), gnorm

@@ -36,12 +36,13 @@ class ServeConfig:
     seed: int = 0
     packed_mlp: bool = False  # run MLP matmuls VUSA-packed (dense family)
     vusa_m: int = 128  # window lanes (kernel tile)
-    vusa_a: int = 16   # physical slots per row per job
+    vusa_a: int = 16  # physical slots per row per job
     fused: bool = True  # on-device lax.scan decode loop (False = seed host loop)
 
 
 class Engine:
-    def __init__(self, cfg: ArchConfig, params, sc: ServeConfig = ServeConfig()):
+    def __init__(self, cfg: ArchConfig, params, sc: Optional[ServeConfig] = None):
+        sc = ServeConfig() if sc is None else sc
         self.cfg, self.sc = cfg, sc
         self.model = build_model(cfg)
         self.params = params
@@ -109,12 +110,17 @@ class Engine:
     def _prefill_fn(self, params, batch):
         return self.model.prefill(params, batch, self.sc.max_len)
 
-    # -- public API -----------------------------------------------------------
-    def generate(self, prompts: np.ndarray, max_new: int = 32, extras: Optional[Dict] = None):
-        """prompts: (B, S) int32.  Returns dict with tokens and timing."""
-        b, s = prompts.shape
-        key = jax.random.key(self.sc.seed)
-        t0 = time.time()
+    # -- reusable entry points (used by generate and serve/scheduler.py) ------
+    def prime(self, prompts, key, extras: Optional[Dict] = None):
+        """Run the prompt through the model: returns ``(first_token, cache,
+        key)`` ready for decode.  ``prompts``: (B, S) int32.
+
+        Prefill families (dense/moe/vlm/encdec) bulk-fill the KV cache and
+        emit the argmax first token without consuming the key; recurrent
+        families scan the prompt through decode steps, splitting the key per
+        prompt token — both exactly as the seed host loop did, so the key
+        stream stays bit-compatible across paths.
+        """
         batch = {"tokens": jnp.asarray(prompts)}
         if extras:
             batch.update({k: jnp.asarray(v) for k, v in extras.items()})
@@ -122,23 +128,44 @@ class Engine:
             logits, cache = self._prefill(self.params, batch)
             nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)[:, None].astype(jnp.int32)
         elif self.sc.fused:
-            cache = self.model.init_cache(b, self.sc.max_len)
+            cache = self.model.init_cache(prompts.shape[0], self.sc.max_len)
             nxt, cache, key = self._prime_loop(self.params, jnp.asarray(prompts), cache, key)
         else:
             # seed path: prime the state by stepping through the prompt
-            cache = self.model.init_cache(b, self.sc.max_len)
-            nxt = prompts[:, :1]
-            for t in range(s):
+            cache = self.model.init_cache(prompts.shape[0], self.sc.max_len)
+            nxt = jnp.asarray(prompts[:, :1])
+            for t in range(prompts.shape[1]):
                 key, sub = jax.random.split(key)
-                nxt, cache = self._decode(self.params, jnp.asarray(prompts[:, t : t + 1]), cache, sub)
+                tok = jnp.asarray(prompts[:, t : t + 1])
+                nxt, cache = self._decode(self.params, tok, cache, sub)
+        return nxt, cache, key
+
+    def decode_segment(self, token, cache, key, steps: int):
+        """``steps`` fused decode steps in one dispatch: returns
+        ``(tokens (B, steps), last_token, cache, key)``."""
+        return self._decode_loop(self.params, token, cache, key, steps)
+
+    # -- public API -----------------------------------------------------------
+    def generate(self, prompts: np.ndarray, max_new: int = 32, extras: Optional[Dict] = None):
+        """prompts: (B, S) int32.  Returns dict with tokens and timing.
+
+        Thin wrapper over ``prime`` + one full-length ``decode_segment``
+        (a single-request schedule with one segment); the seed per-token
+        host loop survives behind ``ServeConfig.fused = False`` as the
+        parity oracle.  ``tok_per_s`` counts only the ``max_new - 1``
+        decoded tokens on both paths (the first token comes out of prime
+        and is billed to ``prefill_s``).
+        """
+        b = prompts.shape[0]
+        key = jax.random.key(self.sc.seed)
+        t0 = time.time()
+        nxt, cache, key = self.prime(prompts, key, extras)
         jax.block_until_ready(nxt)
         t_prefill = time.time() - t0
 
         t0 = time.time()
         if self.sc.fused:
-            toks, last, cache, key = self._decode_loop(
-                self.params, nxt, cache, key, max_new - 1
-            )
+            toks, _, cache, key = self.decode_segment(nxt, cache, key, max_new - 1)
             jax.block_until_ready(toks)
             t_decode = time.time() - t0
             tokens = np.concatenate([np.asarray(nxt), np.asarray(toks)], axis=1)
@@ -155,5 +182,5 @@ class Engine:
             "tokens": tokens,
             "prefill_s": t_prefill,
             "decode_s": t_decode,
-            "tok_per_s": b * max_new / max(t_decode, 1e-9),
+            "tok_per_s": b * (max_new - 1) / max(t_decode, 1e-9),
         }

@@ -1,0 +1,303 @@
+"""Continuous-batching scheduler over the fused decode loop.
+
+``Engine.generate`` serves one fixed batch of equal-length prompts for a
+fixed ``max_new``; real traffic is ragged.  :class:`Scheduler` keeps a fixed
+pool of in-flight *slots* and alternates two phases (DESIGN.md §5):
+
+  admission   free slots are primed host-side with queued requests whose
+              arrival time has passed (per-slot B=1 prefill, per-request
+              PRNG key), and the primed cache/key/token are written into
+              the slot-stacked state;
+  decode      one jitted *segment* — ``segment`` fused ``lax.scan`` steps
+              of the whole pool, vmapped over the slot axis — runs on
+              device, then syncs once; finished slots (EOS or budget)
+              retire and free up for the next admission round.
+
+Each slot is an independent B=1 decode cache stacked on a leading slot axis
+(:mod:`repro.models.cache`), with its own scalar ``pos`` and its own PRNG
+key stream seeded from the request.  That makes every completed request's
+tokens bit-identical to a one-shot ``Engine.generate`` of the same prompt,
+seed and temperature at batch 1 — the scheduler changes *when* work runs,
+never *what* it computes.  Free slots decode along with the pool (cheaper
+than masking the hot path); their output is discarded and their state is
+replaced wholesale at the next admission.
+
+The segment length trades sync overhead against retirement latency: the
+pool only retires/admits at segment boundaries, so a slot whose request
+finished mid-segment decodes (and discards) at most ``segment - 1`` extra
+tokens.  The segment shape is static — one compiled program serves the
+whole run regardless of arrival pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import Engine
+
+__all__ = ["Request", "Completion", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival_s`` is an offset from ``run()``
+    start (0 = already queued); ``seed`` seeds this request's private PRNG
+    stream, mirroring ``ServeConfig.seed`` in one-shot generate."""
+
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    seed: int = 0
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray  # (<= max_new,) int32, truncated just after eos_id
+    arrival_s: float
+    admit_s: float
+    finish_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side bookkeeping for one in-flight slot."""
+
+    rid: int = -1
+    tokens: Optional[List[int]] = None
+    first: Optional[jax.Array] = None  # deferred first token (device, (1,1))
+    remaining: int = 0
+    eos_id: Optional[int] = None
+    arrival_s: float = 0.0
+    admit_s: float = 0.0
+
+    @property
+    def active(self) -> bool:
+        return self.rid >= 0
+
+
+class Scheduler:
+    """Continuous-batching run loop over a fused-decode :class:`Engine`."""
+
+    def __init__(self, engine: Engine, slots: int = 4, segment: int = 8):
+        if not engine.sc.fused:
+            raise ValueError("Scheduler requires a fused-decode engine (ServeConfig.fused)")
+        if slots < 1 or segment < 1:
+            raise ValueError(f"need slots >= 1 and segment >= 1, got {slots}, {segment}")
+        self.eng = engine
+        self.model = engine.model
+        self.slots = slots
+        self.segment = segment
+        self._queue: deque = deque()  # (rid, Request), FIFO by submit order
+        self._completions: Dict[int, Completion] = {}
+        self._next_rid = 0
+        self._slot: List[_Slot] = [_Slot() for _ in range(slots)]
+        # device state: slot-stacked cache, per-slot tokens and raw key data
+        kshape = jax.random.key_data(jax.random.key(0)).shape
+        self._cache = self.model.init_slot_cache(slots, engine.sc.max_len)
+        self._token = jnp.zeros((slots, 1, 1), jnp.int32)
+        self._kdata = jnp.zeros((slots,) + kshape, jnp.uint32)
+        # donate the pool state: segments and admissions update it in place
+        self._seg = jax.jit(
+            self._segment_fn, static_argnums=(4,), donate_argnums=(1, 2, 3)
+        )
+        self._write = jax.jit(self._write_fn, donate_argnums=(0, 1, 2))
+        # run stats
+        self._seg_steps = 0
+        self._active_slot_steps = 0
+        self._decode_s = 0.0
+        self._admit_s = 0.0
+
+    # -- submission -----------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its request id."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        budget = prompt.shape[0] + req.max_new + self.segment
+        if budget > self.eng.sc.max_len:
+            raise ValueError(
+                f"prompt({prompt.shape[0]}) + max_new({req.max_new}) + "
+                f"segment({self.segment}) = {budget} exceeds max_len "
+                f"{self.eng.sc.max_len}"
+            )
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, dataclasses.replace(req, prompt=prompt)))
+        return rid
+
+    # -- jitted segment body --------------------------------------------------
+
+    def _segment_fn(self, params, token, kdata, cache, steps: int):
+        """``steps`` decode steps of all slots; returns the emitted token grid
+        ``(steps, slots)`` plus the advanced state.  Each slot splits its own
+        key and samples at batch 1, exactly as one-shot generate does.
+
+        Free slots decode along with the pool (their output is discarded and
+        their whole state is replaced at the next admission), so the hot
+        path carries no per-slot masking — a free slot's ``pos`` merely
+        drifts until re-admission, and ``attention_decode`` clamps its cache
+        writes at ``max_len``."""
+
+        def body(carry, _):
+            token, kdata, cache = carry
+
+            def one(tok, kd, c):
+                key = jax.random.wrap_key_data(kd)
+                key, sub = jax.random.split(key)
+                nxt, c2 = self.eng._decode_fn(params, tok, c, sub)
+                return nxt, jax.random.key_data(key), c2
+
+            token, kdata, cache = jax.vmap(one)(token, kdata, cache)
+            return (token, kdata, cache), token[:, 0, 0]
+
+        (token, kdata, cache), toks = jax.lax.scan(
+            body, (token, kdata, cache), None, length=steps
+        )
+        return token, kdata, cache, toks
+
+    # -- admission / retirement ----------------------------------------------
+
+    @staticmethod
+    def _write_fn(cache, token, kdata, i, sub, nxt, kd):
+        """Donated single-dispatch write of a primed request into slot ``i``
+        (cache + first token + key data in one go); ``i`` is traced, so one
+        compilation covers every slot."""
+        from ..models.cache import write_slot
+
+        return write_slot(cache, i, sub), token.at[i].set(nxt), kdata.at[i].set(kd)
+
+    def _admit(self, i: int, rid: int, req: Request, now: float) -> bool:
+        """Prime request ``rid`` into slot ``i``.  Returns True if the slot is
+        now in flight (False = the request completed at admission: max_new
+        is 1, or the very first token was EOS)."""
+        t0 = time.monotonic()
+        key = jax.random.key(req.seed)
+        nxt, cache, key = self.eng.prime(req.prompt[None], key)
+        self._cache, self._token, self._kdata = self._write(
+            self._cache, self._token, self._kdata,
+            jnp.int32(i), cache, nxt, jax.random.key_data(key),
+        )
+        slot = self._slot[i]
+        slot.rid, slot.tokens, slot.first = rid, [], nxt
+        slot.remaining = req.max_new - 1
+        slot.arrival_s, slot.admit_s = req.arrival_s, now
+        slot.eos_id = req.eos_id
+        if req.max_new == 1 or req.eos_id is not None:
+            # these need the first token on the host now; everyone else
+            # collects it at the next segment sync, keeping admission async
+            slot.tokens = [int(np.asarray(nxt)[0, 0])]
+            slot.first = None
+            if slot.remaining == 0 or slot.tokens[0] == req.eos_id:
+                self._admit_s += time.monotonic() - t0
+                self._retire(i, now)
+                return False
+        self._admit_s += time.monotonic() - t0
+        return True
+
+    def _retire(self, i: int, now: float) -> Completion:
+        slot = self._slot[i]
+        done = Completion(
+            rid=slot.rid,
+            tokens=np.asarray(slot.tokens, np.int32),
+            arrival_s=slot.arrival_s,
+            admit_s=slot.admit_s,
+            finish_s=now,
+        )
+        self._completions[slot.rid] = done
+        self._slot[i] = _Slot()
+        return done
+
+    # -- run loop -------------------------------------------------------------
+
+    def run(self, requests: Optional[List[Request]] = None) -> Dict[int, Completion]:
+        """Drain the queue (plus ``requests``), honouring arrival times.
+        Returns ``{rid: Completion}``; aggregate numbers via :meth:`stats`."""
+        for r in requests or []:
+            self.submit(r)
+        self._completions = {}
+        self._seg_steps = 0
+        self._active_slot_steps = 0
+        self._decode_s = self._admit_s = 0.0
+        t_start = time.monotonic()
+
+        def now() -> float:
+            return time.monotonic() - t_start
+
+        while self._queue or any(s.active for s in self._slot):
+            # admission: fill free slots with arrived requests, FIFO
+            for i, slot in enumerate(self._slot):
+                if not self._queue:
+                    break
+                if slot.active or self._queue[0][1].arrival_s > now():
+                    continue
+                rid, req = self._queue.popleft()
+                while not self._admit(i, rid, req, now()):
+                    if not self._queue or self._queue[0][1].arrival_s > now():
+                        rid = None
+                        break
+                    rid, req = self._queue.popleft()
+                if rid is None:
+                    continue
+            active_idx = [i for i, s in enumerate(self._slot) if s.active]
+            if not active_idx:
+                if not self._queue:  # everything completed at admission
+                    continue
+                # nothing in flight: sleep until the head request arrives
+                wait = self._queue[0][1].arrival_s - now()
+                if wait > 0:
+                    time.sleep(wait)
+                continue
+            # decode one segment and sync once
+            t0 = time.monotonic()
+            self._token, self._kdata, self._cache, toks = self._seg(
+                self.eng.params, self._token, self._kdata, self._cache,
+                self.segment,
+            )
+            toks_np = np.asarray(toks)  # (segment, slots) — the one sync
+            self._decode_s += time.monotonic() - t0
+            self._seg_steps += self.segment
+            self._active_slot_steps += len(active_idx) * self.segment
+            t = now()
+            for i in active_idx:
+                slot = self._slot[i]
+                if slot.first is not None:  # deferred first token, now free
+                    slot.tokens.append(int(np.asarray(slot.first)[0, 0]))
+                    slot.first = None
+                for tok in toks_np[: min(slot.remaining, self.segment), i]:
+                    slot.tokens.append(int(tok))
+                    slot.remaining -= 1
+                    if (slot.eos_id is not None and tok == slot.eos_id) or slot.remaining == 0:
+                        self._retire(i, t)
+                        break
+        return self._completions
+
+    def stats(self) -> Dict[str, float]:
+        """Aggregate serve metrics for the most recent :meth:`run`."""
+        done = sorted(self._completions.values(), key=lambda c: c.rid)
+        lat = np.asarray([c.latency_s for c in done]) if done else np.zeros(1)
+        decoded = sum(max(len(c.tokens) - 1, 0) for c in done)
+        busy = self._decode_s + self._admit_s
+        return {
+            "requests": len(done),
+            "decoded_tokens": decoded,
+            "sustained_tok_per_s": decoded / max(busy, 1e-9),
+            "decode_s": self._decode_s,
+            "admit_s": self._admit_s,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p95_s": float(np.percentile(lat, 95)),
+            "slot_occupancy": self._active_slot_steps / max(self.slots * self._seg_steps, 1),
+        }

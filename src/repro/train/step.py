@@ -9,8 +9,7 @@ lowers AOT for the dry-run exactly as it runs in the trainer.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

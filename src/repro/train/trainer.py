@@ -18,8 +18,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from pathlib import Path
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -94,7 +93,10 @@ class Trainer:
         if self.ckpt:
             got, restored = self.ckpt.restore_latest(
                 {"params": params, "opt": opt},
-                {"params": self.p_shard, "opt": AdamState(step=None, mu=self.p_shard, nu=self.p_shard)},
+                {
+                    "params": self.p_shard,
+                    "opt": AdamState(step=None, mu=self.p_shard, nu=self.p_shard),
+                },
             )
             if got is not None:
                 params, opt = restored["params"], restored["opt"]

@@ -1,6 +1,5 @@
 """Checkpoint subsystem: roundtrip, retention, atomicity, latest-step."""
 
-import json
 from pathlib import Path
 
 import jax

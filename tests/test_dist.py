@@ -8,13 +8,11 @@ import textwrap
 from pathlib import Path
 
 import jax
-import numpy as np
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
-from repro.configs import get_config
-from repro.dist.sharding import param_sharding
-from repro.models.common import ParamSpec
+from repro.dist.sharding import param_sharding  # noqa: E402
+from repro.models.common import ParamSpec  # noqa: E402
 
 
 def _run(code: str) -> str:

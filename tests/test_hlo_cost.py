@@ -4,8 +4,6 @@ programs (this is what the whole §Roofline table rests on)."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_cost import hlo_cost, parse_hlo
 

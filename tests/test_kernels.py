@@ -1,7 +1,6 @@
 """Per-kernel allclose tests: Pallas (interpret mode) vs the pure-jnp oracle
 in ref.py, swept over shapes, dtypes and sparsity levels (+ hypothesis)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

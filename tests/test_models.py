@@ -29,9 +29,11 @@ def _batch(cfg, b=2, s=16, seed=0):
     rng = np.random.default_rng(seed)
     out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
     if cfg.family == "vlm":
-        out["patches"] = jnp.asarray(rng.normal(0, 0.02, (b, cfg.patch_tokens, cfg.d_model)), jnp.float32)
+        patches = rng.normal(0, 0.02, (b, cfg.patch_tokens, cfg.d_model))
+        out["patches"] = jnp.asarray(patches, jnp.float32)
     if cfg.family == "encdec":
-        out["frames"] = jnp.asarray(rng.normal(0, 0.02, (b, cfg.enc_frames, cfg.d_model)), jnp.float32)
+        frames = rng.normal(0, 0.02, (b, cfg.enc_frames, cfg.d_model))
+        out["frames"] = jnp.asarray(frames, jnp.float32)
     return out
 
 
@@ -137,7 +139,10 @@ def test_input_specs_cover_all_cells():
         cfg = get_config(arch)
         model = build_model(cfg)
         for shape in SHAPES.values():
-            kind = "train" if shape.kind == "train" else ("prefill" if shape.kind == "prefill" else "decode")
+            if shape.kind in ("train", "prefill"):
+                kind = shape.kind
+            else:
+                kind = "decode"
             spec = model.input_specs(shape.global_batch, shape.seq_len, kind)
             assert all(hasattr(v, "shape") for v in spec.values())
 

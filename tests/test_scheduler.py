@@ -1,0 +1,231 @@
+"""Continuous-batching scheduler: per-request parity with one-shot generate
+(greedy/sampled, packed/dense, across families), EOS retirement, mid-stream
+admission, ragged prompts, and slot-cache reset on reuse."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.pruning import prune_tree
+from repro.models import build_model
+from repro.serve import Engine, Request, Scheduler, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3_2_1b")
+    params = build_model(cfg).init(jax.random.key(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def vusa_pruned():
+    cfg = get_smoke_config("vusa_edge")
+    params = prune_tree(build_model(cfg).init(jax.random.key(0)), 0.85)
+    return cfg, params
+
+
+def _one_shot(eng, prompt, max_new, seed):
+    """Reference: one-shot B=1 generate with the request's seed (reusing the
+    engine's jit cache — the seed enters via the key argument, not the
+    trace)."""
+    eng.sc.seed = seed
+    return eng.generate(prompt[None], max_new=max_new)["tokens"][0]
+
+
+def _check_parity(cfg, params, done, reqs, sc: ServeConfig):
+    ref_eng = Engine(cfg, params, dataclasses.replace(sc))
+    assert sorted(done) == list(range(len(reqs)))
+    for rid, c in sorted(done.items()):
+        one = _one_shot(ref_eng, reqs[rid].prompt, reqs[rid].max_new, reqs[rid].seed)
+        if reqs[rid].eos_id is not None and (one == reqs[rid].eos_id).any():
+            one = one[: int(np.argmax(one == reqs[rid].eos_id)) + 1]
+        np.testing.assert_array_equal(c.tokens, one, err_msg=f"rid {rid}")
+
+
+# ---------------------------------------------------------------------------
+# parity: scheduler tokens == one-shot generate tokens, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_parity_dense(llama, temperature):
+    cfg, params = llama
+    sc = ServeConfig(max_len=64, temperature=temperature)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=2, segment=4)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(0, 100, 6).astype(np.int32), max_new=10, seed=i)
+        for i in range(5)
+    ]
+    done = sched.run(reqs)
+    _check_parity(cfg, params, done, reqs, sc)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_parity_packed(vusa_pruned, temperature):
+    """The VUSA-packed MLP path must keep working under the scheduler."""
+    cfg, params = vusa_pruned
+    sc = ServeConfig(max_len=64, temperature=temperature, packed_mlp=True)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=2, segment=4)
+    rng = np.random.default_rng(1)
+    reqs = [
+        Request(prompt=rng.integers(0, 100, 5).astype(np.int32), max_new=8, seed=20 + i)
+        for i in range(3)
+    ]
+    done = sched.run(reqs)
+    _check_parity(cfg, params, done, reqs, sc)
+
+
+def test_parity_recurrent_family():
+    """Slot caches are family-agnostic: Mamba-2 conv/SSM state slots work."""
+    cfg = get_smoke_config("mamba2_2_7b")
+    params = build_model(cfg).init(jax.random.key(0))
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=2, segment=4)
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(prompt=rng.integers(0, 100, 6).astype(np.int32), max_new=8, seed=i)
+        for i in range(3)
+    ]
+    done = sched.run(reqs)
+    _check_parity(cfg, params, done, reqs, sc)
+
+
+def test_parity_ragged_prompts(llama):
+    """Slots at ragged positions (different prompt lengths, admitted at
+    different times) must not perturb each other."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=3, segment=4)
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(prompt=rng.integers(0, 100, n).astype(np.int32), max_new=m, seed=i)
+        for i, (n, m) in enumerate([(4, 12), (9, 6), (6, 10), (4, 8), (9, 9)])
+    ]
+    done = sched.run(reqs)
+    _check_parity(cfg, params, done, reqs, sc)
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_eos_retires_and_frees_slot(llama):
+    """EOS mid-stream retires the request, truncates its tokens just after
+    the EOS, and frees the slot for the queued request — whose bit-exact
+    output proves the slot cache was fully reset."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    ref_eng = Engine(cfg, params, dataclasses.replace(sc))
+    rng = np.random.default_rng(4)
+    p0 = rng.integers(0, 100, 6).astype(np.int32)
+    p1 = rng.integers(0, 100, 6).astype(np.int32)
+    one0 = _one_shot(ref_eng, p0, 12, seed=3)
+    eos = int(one0[3])  # 4th generated token becomes the stop token
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=1, segment=4)
+    reqs = [
+        Request(prompt=p0, max_new=12, eos_id=eos, seed=3),
+        Request(prompt=p1, max_new=8, seed=7),
+    ]
+    done = sched.run(reqs)
+    assert len(done[0].tokens) == 4 and done[0].tokens[-1] == eos
+    np.testing.assert_array_equal(done[0].tokens, one0[:4])
+    np.testing.assert_array_equal(done[1].tokens, _one_shot(ref_eng, p1, 8, seed=7))
+    # the second request could only run after the first retired its slot
+    assert done[1].admit_s >= done[0].finish_s
+
+
+def test_queued_request_admitted_mid_stream(llama):
+    """With a long and a short request in flight, the queued third request
+    must be admitted into the short one's slot while the long one is still
+    decoding — not after the whole pool drains."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=96)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=2, segment=4)
+    rng = np.random.default_rng(5)
+    reqs = [
+        Request(prompt=rng.integers(0, 100, 6).astype(np.int32), max_new=40, seed=0),
+        Request(prompt=rng.integers(0, 100, 6).astype(np.int32), max_new=6, seed=1),
+        Request(prompt=rng.integers(0, 100, 6).astype(np.int32), max_new=6, seed=2),
+    ]
+    done = sched.run(reqs)
+    _check_parity(cfg, params, done, reqs, sc)
+    # rid 2 entered after rid 1 retired but before the long rid 0 finished
+    assert done[1].finish_s <= done[2].admit_s <= done[0].finish_s
+    assert sched.stats()["slot_occupancy"] > 0.5
+
+
+def test_instant_completion_at_admission(llama):
+    """max_new=1 (and first-token EOS) complete at admission without ever
+    occupying a decode slot segment."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    ref_eng = Engine(cfg, params, dataclasses.replace(sc))
+    rng = np.random.default_rng(6)
+    p = rng.integers(0, 100, 6).astype(np.int32)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=1, segment=4)
+    done = sched.run([Request(prompt=p, max_new=1, seed=0)])
+    np.testing.assert_array_equal(done[0].tokens, _one_shot(ref_eng, p, 1, seed=0))
+
+
+def test_submit_validates_budget(llama):
+    cfg, params = llama
+    sched = Scheduler(Engine(cfg, params, ServeConfig(max_len=32)), slots=1, segment=8)
+    with pytest.raises(ValueError, match="max_len"):
+        sched.submit(Request(prompt=np.ones(8, np.int32), max_new=30))
+    with pytest.raises(ValueError, match="fused"):
+        Scheduler(Engine(cfg, params, ServeConfig(max_len=32, fused=False)))
+
+
+# ---------------------------------------------------------------------------
+# models cache API: slot slicing / reset round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "mamba2_2_7b", "recurrentgemma_9b"])
+def test_slot_cache_roundtrip(arch):
+    """write_slot/read_slot round-trip one slot without touching neighbours;
+    reset_slot returns the slot to the init state — across cache families."""
+    from repro.models.cache import slot_count
+
+    model = build_model(get_smoke_config(arch))
+    stacked = model.init_slot_cache(3, 32)
+    assert slot_count(stacked) == 3
+    sub = jax.tree.map(
+        lambda leaf: (jax.numpy.zeros_like(leaf) + 1).astype(leaf.dtype),
+        model.init_cache(1, 32),
+    )
+    written = model.write_slot(stacked, 1, sub)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        model.read_slot(written, 1), sub,
+    )
+    for other in (0, 2):  # neighbours untouched
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+            model.read_slot(written, other), model.read_slot(stacked, other),
+        )
+    cleared = model.reset_slot(written, 1)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        cleared, stacked,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig default regression (shared mutable default)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_default_config_not_shared(llama):
+    cfg, params = llama
+    a = Engine(cfg, params)
+    b = Engine(cfg, params)
+    a.sc.seed = 123
+    assert b.sc.seed == 0

@@ -8,7 +8,6 @@ from repro.core.simulator import (
     Gemm,
     gemm_cycles_standard,
     gemm_cycles_vusa,
-    model_cycles_standard,
     model_cycles_vusa,
     ws_cycles,
 )

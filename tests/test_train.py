@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core.pruning import tree_sparsity
 from repro.train import TrainConfig, Trainer, TrainHParams
 
 
@@ -53,7 +52,8 @@ def test_microbatched_grads_match_full_batch():
 
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    batch = {"tokens": jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (4, 32)), jnp.int32)}
+    ids = np.random.default_rng(0).integers(0, cfg.vocab, (4, 32))
+    batch = {"tokens": jnp.asarray(ids, jnp.int32)}
     hp1 = TrainHParams(lr=1e-3, microbatches=1)
     hp2 = TrainHParams(lr=1e-3, microbatches=2)
     p1, _, m1 = jax.jit(make_train_step(model.loss, hp1))(params, adamw_init(params), batch)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
-from repro.core.growth import expected_width_distribution, growth_curves, p_grow, p_row_gain
+from repro.core.growth import expected_width_distribution, p_grow
 from repro.core.hwmodel import TABLE1_PAPER, HwModel, table1
 from repro.core.packing import (
     pack_blocks,
