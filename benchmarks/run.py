@@ -13,6 +13,7 @@ Framework micro-benchmarks:
   kernel_vusa_packed    packed-vs-dense matmul (bytes + wall time, CPU jnp)
   bench_scheduler       host-side schedule throughput
   bench_train_decode    smoke-model jitted train/decode step wall time
+  bench_admission       bucketed batched admission vs per-request admission
 """
 
 from __future__ import annotations
@@ -378,6 +379,9 @@ def bench_continuous_batching():
     def run_sched(sched):
         t0 = time.time()
         done = sched.run(requests(True))
+        # stats() reports NaN percentiles when nothing completed (instead of
+        # a fabricated 0.0 that reads as infinitely fast); the assert keeps
+        # this bench from ever publishing numbers for such a hollow run
         assert len(done) == n_req, "scheduler lost requests"
         return sched.stats(), (time.time() - t0) * 1e6
 
@@ -427,6 +431,86 @@ def bench_continuous_batching():
           f"occ={stats['slot_occupancy']:.2f};"
           f"p50={stats['latency_p50_s'] * 1e3:.0f}ms;"
           f"p95={stats['latency_p95_s'] * 1e3:.0f}ms")
+
+
+def bench_admission():
+    """Bucketed batched admission vs per-request admission (DESIGN.md §6) on
+    an admission-bound workload: many short ragged prompts (10 distinct
+    lengths), out-of-order sub-ms arrivals, EOS-heavy early retirement.  The
+    sequential arm primes one request per dispatch at its exact length; the
+    batched arm coalesces each round's arrivals into one masked-prefill
+    dispatch per length bucket + one multi-slot scatter.  Identical tokens
+    required; sustained useful tok/s and prefill compile counts compared."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serve import Engine, Request, Scheduler, ServeConfig
+
+    cfg = get_smoke_config("llama3_2_1b")
+    params = build_model(cfg).init(jax.random.key(0))
+    slots, segment, max_len = 4, 4, 64
+    rng = np.random.default_rng(0)
+    n_req = 32
+    lens = [3 + i % 10 for i in range(n_req)]  # 10 distinct lengths, all short
+    prompts = [rng.integers(0, 100, n).astype(np.int32) for n in lens]
+    arrivals = rng.permutation(np.linspace(0, 0.002, n_req))  # out of submit order
+    # EOS-heavy: a third of the requests stop early on a token they really emit
+    ref = Engine(cfg, params, ServeConfig(max_len=max_len))  # greedy: seed unused
+    eos_ids = {}
+    for i in range(0, n_req, 3):
+        eos_ids[i] = int(ref.generate(prompts[i][None], max_new=8)["tokens"][0, 2])
+
+    def requests():
+        return [
+            Request(prompt=prompts[i], max_new=8, eos_id=eos_ids.get(i), seed=i,
+                    arrival_s=float(arrivals[i]))
+            for i in range(n_req)
+        ]
+
+    stats, scheds = {}, {}
+    for mode in ("sequential", "batched"):
+        sched = Scheduler(Engine(cfg, params, ServeConfig(max_len=max_len)),
+                          slots=slots, segment=segment, admission=mode)
+        scheds[mode] = sched
+        done = sched.run(requests())  # warmup: compiles every program the mode needs
+        tokens = {rid: c.tokens for rid, c in done.items()}
+        best = None
+        for _ in range(3):
+            done = sched.run(requests())
+            assert len(done) == n_req, "scheduler lost requests"
+            s = sched.stats()
+            if best is None or s["sustained_tok_per_s"] > best["sustained_tok_per_s"]:
+                best = s
+        stats[mode] = best
+        stats[mode]["tokens"] = tokens
+    for rid in range(n_req):  # batching must not change a single token
+        np.testing.assert_array_equal(stats["batched"]["tokens"][rid],
+                                      stats["sequential"]["tokens"][rid])
+    b, s = stats["batched"], stats["sequential"]
+    speedup = b["sustained_tok_per_s"] / s["sustained_tok_per_s"]
+    compiles = {
+        "batched": scheds["batched"].eng._prefill_masked._cache_size(),
+        "sequential": scheds["sequential"].eng._prefill._cache_size(),
+    }
+    _save("bench_admission", {
+        "batched_tok_per_s": b["sustained_tok_per_s"],
+        "sequential_tok_per_s": s["sustained_tok_per_s"],
+        "speedup_vs_sequential": speedup,
+        "batched_admit_s": b["admit_s"],
+        "sequential_admit_s": s["admit_s"],
+        "prefill_compiles_batched": compiles["batched"],
+        "prefill_compiles_sequential": compiles["sequential"],
+        "requests": n_req,
+        "slots": slots,
+        "segment": segment,
+    })
+    _emit("bench_admission", b["admit_s"] * 1e6,
+          f"batched_tok_s={b['sustained_tok_per_s']:.0f};"
+          f"sequential_tok_s={s['sustained_tok_per_s']:.0f};"
+          f"speedup={speedup:.2f}x;"
+          f"compiles={compiles['batched']}vs{compiles['sequential']};"
+          f"admit_s={b['admit_s']:.3f}vs{s['admit_s']:.3f}")
 
 
 def bench_scheduler():
@@ -541,6 +625,7 @@ BENCHES = {
     "bench_train_decode": bench_train_decode,
     "bench_decode_fused": bench_decode_fused,
     "bench_continuous_batching": bench_continuous_batching,
+    "bench_admission": bench_admission,
 }
 
 # Metrics protected by the CI regression gate.  All are higher-is-better;
@@ -552,11 +637,15 @@ BENCHES = {
 # record a conservative noise floor (~0.85x of a best-of-N measurement) so
 # run-to-run variance does not trip the gate while a real perf loss still
 # does; the interleaved ratios (speedup_vs_oneshot, kernel_speedup) are
-# stable and committed as measured.
+# stable and committed as measured.  Both bench_admission entries are such
+# floors (its sequential arm is dispatch-bound and the noisiest measurement
+# here): a structural loss of admission batching still lands well below
+# them, while scheduler-level jitter does not.
 BASELINE_METRICS = {
     "bench_decode_fused": ["fused_tok_per_s", "speedup"],
     "kernel_vusa_packed": ["sparsity_0.85/kernel_speedup"],
     "bench_continuous_batching": ["sched_tok_per_s", "speedup_vs_oneshot"],
+    "bench_admission": ["batched_tok_per_s", "speedup_vs_sequential"],
 }
 
 

@@ -54,8 +54,10 @@ def main():
     assert (tokens_dense == tokens_packed).all(), "packed serving diverged!"
     print("outputs identical: True")
 
-    # continuous batching over ragged traffic (DESIGN.md §5): same packed
-    # engine, per-request budgets/seeds, slots backfilled as requests retire
+    # continuous batching over ragged traffic (DESIGN.md §5-§6): same packed
+    # engine, per-request budgets/seeds/arrivals; each round's arrivals are
+    # bucket-padded and prefilled in one batched dispatch, and slots are
+    # backfilled as requests retire
     from repro.serve import Request, Scheduler
 
     eng = Engine(cfg, params, ServeConfig(max_len=128, packed_mlp=True))
@@ -64,7 +66,8 @@ def main():
     budget_cap = 128 - 8 - 8  # max_len - longest prompt - segment
     reqs = [
         Request(prompt=rng.integers(0, cfg.vocab, 4 + 2 * (i % 3)).astype(np.int32),
-                max_new=int(rng.integers(4, min(2 * args.new, budget_cap) + 1)), seed=i)
+                max_new=int(rng.integers(4, min(2 * args.new, budget_cap) + 1)), seed=i,
+                arrival_s=float(rng.exponential(0.002)))
         for i in range(2 * args.batch)
     ]
     done = sched.run(reqs)

@@ -22,6 +22,8 @@ __all__ = [
     "init_slot_cache",
     "read_slot",
     "write_slot",
+    "write_slots",
+    "batch_axes",
     "reset_slot",
     "slot_count",
 ]
@@ -52,6 +54,48 @@ def write_slot(slot_cache, i: int, sub_cache):
     return jax.tree_util.tree_map(
         lambda leaf, sub: leaf.at[i].set(sub.astype(leaf.dtype)), slot_cache, sub_cache
     )
+
+
+def batch_axes(specs_b1, specs_b2):
+    """Locate each cache leaf's batch axis, family-agnostically: diff the
+    ShapeDtypeStruct trees for two batch sizes and record, per leaf, the one
+    axis whose extent changed (-1 for per-sequence scalars such as ``pos``,
+    which carry no batch axis).  This is what lets :func:`write_slots`
+    scatter a *batched* prefill cache — whose batch axis sits at a different
+    position per leaf (e.g. axis 1 under a leading ``layers`` axis) — without
+    hardcoding any family's tree structure."""
+
+    def one(s1, s2):
+        diffs = [i for i, (a, b) in enumerate(zip(s1.shape, s2.shape)) if a != b]
+        if not diffs:
+            return -1
+        if len(diffs) != 1:
+            raise ValueError(f"ambiguous batch axis: {s1.shape} vs {s2.shape}")
+        return diffs[0]
+
+    return jax.tree_util.tree_map(one, specs_b1, specs_b2)
+
+
+def write_slots(slot_cache, idx, batched_cache, axes, pos):
+    """Scatter a batched (B=N) cache into slots ``idx`` in one donated
+    dispatch — the multi-slot twin of :func:`write_slot` used by bucketed
+    admission (DESIGN.md §6).
+
+    ``idx`` (N,) int32 picks the destination slot per batch row; rows whose
+    index is out of range (e.g. batch-bucket padding rows) are dropped.
+    ``axes`` is the :func:`batch_axes` tree; batched leaves are split along
+    their batch axis (keeping a size-1 batch dim, matching the per-slot B=1
+    shape).  Per-sequence scalar leaves (axis -1, i.e. ``pos``) are written
+    from ``pos`` (N,) — the true per-row lengths under masked prefill, where
+    the batched cache's own scalar ``pos`` holds the padded bucket length."""
+
+    def one(leaf, sub, ax):
+        if ax < 0:
+            return leaf.at[idx].set(pos.astype(leaf.dtype), mode="drop")
+        rows = jnp.expand_dims(jnp.moveaxis(sub, ax, 0), ax + 1)  # (N,) + B=1 shape
+        return leaf.at[idx].set(rows.astype(leaf.dtype), mode="drop")
+
+    return jax.tree_util.tree_map(one, slot_cache, batched_cache, axes)
 
 
 def reset_slot(slot_cache, i: int):

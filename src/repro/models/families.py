@@ -103,9 +103,9 @@ def lm_specs(cfg) -> dict:
     return specs
 
 
-def _lm_layer(lp, x, cfg, mask: MaskSpec, positions):
+def _lm_layer(lp, x, cfg, mask: MaskSpec, positions, kv_valid=None):
     h = rms_norm(x, lp["norm1"])
-    x = x + attention(lp["attn"], h, cfg, mask, positions)
+    x = x + attention(lp["attn"], h, cfg, mask, positions, kv_valid=kv_valid)
     x = shard(x, "batch", None, "embed")
     h = rms_norm(x, lp["norm2"])
     if cfg.family == "moe":
@@ -213,16 +213,37 @@ def lm_decode_step(params, token, cache, cfg):
     return logits, {**new_kv, "pos": pos + 1}
 
 
-def lm_prefill(params, batch, cfg, max_len: int):
+def lm_prefill(params, batch, cfg, max_len: int, lengths=None):
     """Run the prompt through the train path, then bulk-write the KV cache.
 
     For lowering/runtime simplicity we recompute K/V per layer into the cache
     (prefill is compute-bound anyway; the flash path already produced the
-    hidden states)."""
+    hidden states).
+
+    ``lengths`` (B,) enables *masked* bucketed prefill (DESIGN.md §6):
+    ``tokens`` are right-padded to a shared bucket length and each row's true
+    prompt length is given instead.  Logits are gathered at each row's last
+    real token and are bit-identical to an unpadded prefill of that row —
+    right-padding keeps every real token's causal window unchanged, and
+    ``kv_valid`` masks padded keys to exactly-zero probability.  Cache rows at
+    positions >= length hold garbage the decode-side occupancy mask
+    (``slots <= pos``) never reads, so callers must set each row's true
+    ``pos`` (``cache["pos"]`` stays the scalar padded length; the serve
+    scheduler overrides it per slot via ``write_slots``).
+
+    Caveat (moe): capacity-bounded dispatch couples rows — padding and
+    co-batched tokens consume shared expert capacity — so bit-exactness
+    additionally requires a dropless capacity factor
+    (``moe_cf >= n_experts / top_k``); the serve engine only enables
+    batched admission for moe under that condition."""
     tokens = batch["tokens"]
     b, s = tokens.shape
     cache = lm_init_cache(cfg, b, max_len)
     x, mask, positions = _lm_inputs(params, batch, cfg)
+    kv_valid = None
+    patch_off = cfg.patch_tokens if cfg.family == "vlm" else 0
+    if lengths is not None:
+        kv_valid = jnp.arange(x.shape[1])[None, :] < (lengths[:, None] + patch_off)
 
     from .layers import _project_qkv  # noqa: PLC0415
 
@@ -230,7 +251,7 @@ def lm_prefill(params, batch, cfg, max_len: int):
         x, ks, vs = carry
         h = rms_norm(x, lp["norm1"])
         _, k, v = _project_qkv(lp["attn"], h, cfg, positions)
-        x, _ = _lm_layer(lp, x, cfg, mask, positions)
+        x, _ = _lm_layer(lp, x, cfg, mask, positions, kv_valid)
         return (x, ks, vs), (k, v)
 
     (xf, _, _), (ks, vs) = jax.lax.scan(body, (x, 0, 0), params["layers"])
@@ -243,7 +264,12 @@ def lm_prefill(params, batch, cfg, max_len: int):
     )
     cache["pos"] = jnp.int32(x.shape[1])
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = jnp.einsum("bd,dv->bv", xf[:, -1], head.astype(xf.dtype))
+    if lengths is None:
+        last = xf[:, -1]
+    else:  # each row's last real token (bucket padding sits after it)
+        idx = (lengths - 1 + patch_off)[:, None, None]
+        last = jnp.take_along_axis(xf, idx, axis=1)[:, 0]
+    logits = jnp.einsum("bd,dv->bv", last, head.astype(xf.dtype))
     return logits, cache
 
 

@@ -110,11 +110,15 @@ def _flash_attend(
     mask: MaskSpec,
     q_pos: jax.Array,  # (Sq,)
     k_pos: jax.Array,  # (Sk,)
-    kv_valid: Optional[jax.Array] = None,  # (Sk,) bool; e.g. cache occupancy
+    kv_valid: Optional[jax.Array] = None,  # (Sk,) or (B, Sk) bool; cache occupancy / padding
     q_chunk: int = 512,
     kv_chunk: int = 512,
 ) -> jax.Array:
-    """Online-softmax attention, O(chunk^2) memory.  Returns (B,Sq,KVH,G,hd)."""
+    """Online-softmax attention, O(chunk^2) memory.  Returns (B,Sq,KVH,G,hd).
+
+    ``kv_valid`` may be shared across the batch ``(Sk,)`` (cache occupancy)
+    or per-row ``(B, Sk)`` (ragged true lengths under bucketed prefill,
+    DESIGN.md §6) — invalid keys get exactly-zero probability either way."""
     b, sq, kvh, g, hd = q.shape
     sk = k.shape[1]
     q_chunk = min(q_chunk, sq)
@@ -127,6 +131,7 @@ def _flash_attend(
     sk_pad = (-sk) % kv_chunk
     if kv_valid is None:
         kv_valid = jnp.ones((sk,), bool)
+    per_row_valid = kv_valid.ndim == 2
     if sq_pad:
         q = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0), (0, 0)))
         q_pos = jnp.pad(q_pos, (0, sq_pad))
@@ -134,7 +139,9 @@ def _flash_attend(
         k = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
         k_pos = jnp.pad(k_pos, (0, sk_pad))
-        kv_valid = jnp.pad(kv_valid, (0, sk_pad))
+        kv_valid = jnp.pad(
+            kv_valid, ((0, 0), (0, sk_pad)) if per_row_valid else (0, sk_pad)
+        )
     sq_full, sk_full = sq + sq_pad, sk + sk_pad
 
     qs = q.reshape(b, sq_full // q_chunk, q_chunk, kvh, g, hd)
@@ -142,7 +149,11 @@ def _flash_attend(
     vs = v.reshape(b, sk_full // kv_chunk, kv_chunk, kvh, hd)
     qps = q_pos.reshape(sq_full // q_chunk, q_chunk)
     kps = k_pos.reshape(sk_full // kv_chunk, kv_chunk)
-    valid = kv_valid.reshape(sk_full // kv_chunk, kv_chunk)
+    if per_row_valid:
+        # scan axis leads: (nk, B, kv_chunk)
+        valid = kv_valid.reshape(b, sk_full // kv_chunk, kv_chunk).swapaxes(0, 1)
+    else:
+        valid = kv_valid.reshape(sk_full // kv_chunk, kv_chunk)
 
     def q_step(_, qc):
         qi, qp = qc  # (b, qc, kvh, g, hd), (qc,)
@@ -152,8 +163,12 @@ def _flash_attend(
             ki, vi, kp, va = kc
             s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, ki, preferred_element_type=jnp.float32)
             s = s * scale
-            allow = mask(qp, kp) & va[None, :]
-            s = jnp.where(allow[None, None, None], s, _NEG_INF)
+            if per_row_valid:
+                allow = mask(qp, kp)[None] & va[:, None, :]  # (B, Q, K)
+                s = jnp.where(allow[:, None, None], s, _NEG_INF)
+            else:
+                allow = mask(qp, kp) & va[None, :]
+                s = jnp.where(allow[None, None, None], s, _NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -450,14 +465,25 @@ def attention(
     cfg,
     mask: MaskSpec,
     positions: Optional[jax.Array] = None,  # (S,) token positions
+    kv_valid: Optional[jax.Array] = None,  # (B, S) bool; padded keys under bucketed prefill
 ) -> jax.Array:
-    """Full-sequence self-attention (train / prefill)."""
+    """Full-sequence self-attention (train / prefill).
+
+    ``kv_valid`` marks real (non-padding) keys per batch row for masked
+    bucketed prefill (DESIGN.md §6).  With right-padding the causal mask
+    already hides padding from every valid query, so this is defence in
+    depth (and load-bearing for non-causal mask kinds); it is an
+    inference-only path and skips the custom-VJP / seq-sharded variants."""
     b, s, _ = x.shape
     nh, kvh, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
     if positions is None:
         positions = jnp.arange(s)
     q, k, v = _project_qkv(p, x, cfg, positions)
     q = q.reshape(b, s, kvh, nh // kvh, hd)
+    if kv_valid is not None:
+        out = _flash_attend(q, k, v, mask, positions, positions, kv_valid=kv_valid)
+        out = out.reshape(b, s, nh, hd)
+        return jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
     out = _maybe_seq_sharded_attention(q, k, v, mask, positions, cfg)
     if out is not None:
         pass

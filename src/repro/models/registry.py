@@ -94,6 +94,21 @@ class Model:
 
         return write_slot(slot_cache, i, sub_cache)
 
+    def cache_batch_axes(self, max_len: int):
+        """Per-leaf batch-axis tree (see :func:`repro.models.cache.batch_axes`)
+        for scattering batched prefill caches into slots with
+        :meth:`write_slots`."""
+        from .cache import batch_axes
+
+        return batch_axes(self.cache_specs(1, max_len), self.cache_specs(2, max_len))
+
+    def write_slots(self, slot_cache, idx, batched_cache, axes, pos):
+        """Scatter a batched (B=N) cache into slots ``idx`` (one dispatch);
+        ``pos`` (N,) sets each slot's true sequence position."""
+        from .cache import write_slots
+
+        return write_slots(slot_cache, idx, batched_cache, axes, pos)
+
     def reset_slot(self, slot_cache, i: int):
         from .cache import reset_slot
 
@@ -116,11 +131,17 @@ class Model:
             return F.encdec_decode_step(params, token, cache, self.cfg)
         raise ValueError(fam)
 
-    def prefill(self, params, batch, max_len: int):
+    def prefill(self, params, batch, max_len: int, lengths=None):
+        """``lengths`` (B,) enables masked bucketed prefill for the LM
+        families (right-padded tokens, per-row true lengths; DESIGN.md §6)."""
         fam = self.cfg.family
         if fam in ("dense", "moe", "vlm"):
-            return F.lm_prefill(params, batch, self.cfg, max_len)
+            return F.lm_prefill(params, batch, self.cfg, max_len, lengths=lengths)
         if fam == "encdec":
+            if lengths is not None:
+                raise NotImplementedError(
+                    "masked prefill: encdec consumes frames, not ragged tokens"
+                )
             return F.encdec_prefill(params, batch, self.cfg, max_len)
         raise NotImplementedError(f"prefill for {fam} uses forward+state capture")
 

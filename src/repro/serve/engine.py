@@ -38,6 +38,10 @@ class ServeConfig:
     vusa_m: int = 128  # window lanes (kernel tile)
     vusa_a: int = 16  # physical slots per row per job
     fused: bool = True  # on-device lax.scan decode loop (False = seed host loop)
+    # prompt-length buckets for batched masked prefill (DESIGN.md §6); empty
+    # tuple = powers of two from 8 up to max_len.  One compiled prefill
+    # program per (bucket, batch-bucket) serves any prompt length.
+    prefill_buckets: tuple = ()
 
 
 class Engine:
@@ -56,6 +60,19 @@ class Engine:
         self._prime_loop = jax.jit(self._prime_loop_fn)
         self._prefill = jax.jit(self._prefill_fn) if cfg.family in (
             "dense", "moe", "vlm", "encdec") else None
+        # masked bucketed prefill — dense, and moe only when dropless:
+        # capacity-bounded MoE dispatch couples co-batched rows (padding and
+        # neighbour tokens consume shared expert capacity, changing which
+        # tokens drop), so batching is only bit-exact when no token can ever
+        # drop (moe_cf >= n_experts/top_k).  encdec consumes frames, and vlm
+        # needs per-request patch extras prime_many has no way to carry (and
+        # whose patch-prefix KV rows the token-length slot ``pos`` would
+        # disown).  Everything else falls back to per-request admission.
+        batchable = cfg.family == "dense" or (
+            cfg.family == "moe" and cfg.moe_cf >= cfg.n_experts / cfg.top_k
+        )
+        self._prefill_masked = jax.jit(self._prefill_masked_fn) if batchable else None
+        self._buckets = self._make_buckets(sc)
 
     # -- jitted bodies --------------------------------------------------------
     def _decode_fn(self, params, token, cache, key):
@@ -110,6 +127,52 @@ class Engine:
     def _prefill_fn(self, params, batch):
         return self.model.prefill(params, batch, self.sc.max_len)
 
+    def _prefill_masked_fn(self, params, batch, lengths):
+        """Masked bucketed prefill: right-padded (B, bucket) tokens with true
+        ``lengths`` (B,) — per-row logits/KV bit-identical to unpadded
+        prefill (DESIGN.md §6).  Returns the greedy first token too, so
+        admission needs no extra dispatch."""
+        logits, cache = self.model.prefill(params, batch, self.sc.max_len, lengths=lengths)
+        nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)[:, None].astype(jnp.int32)
+        return nxt, cache
+
+    # -- prompt-length buckets -------------------------------------------------
+    @staticmethod
+    def _make_buckets(sc: ServeConfig):
+        if sc.prefill_buckets:
+            bks = sorted(set(int(b) for b in sc.prefill_buckets))
+            if bks[0] < 1 or bks[-1] > sc.max_len:
+                raise ValueError(f"prefill_buckets {bks} outside [1, max_len={sc.max_len}]")
+            if bks[-1] < sc.max_len:
+                # always cover max_len: a prompt longer than the largest
+                # bucket would otherwise fall back to exact-length compiles,
+                # silently unbounding the compile count under ragged traffic
+                bks.append(sc.max_len)
+            return bks
+        bks, b = [], 8
+        while b < sc.max_len:
+            bks.append(b)
+            b *= 2
+        bks.append(sc.max_len)
+        return bks
+
+    @property
+    def prefill_buckets(self):
+        return tuple(self._buckets)
+
+    @property
+    def batched_prefill(self) -> bool:
+        """True when the family supports one-dispatch bucketed admission."""
+        return self._prefill_masked is not None
+
+    def bucket_len(self, n: int) -> int:
+        """Smallest configured bucket >= n (the bucket set always covers
+        max_len, and prime/prime_many reject prompts past it)."""
+        for b in self._buckets:
+            if b >= n:
+                return b
+        return n  # unreachable for admitted prompts; keeps the helper total
+
     # -- reusable entry points (used by generate and serve/scheduler.py) ------
     def prime(self, prompts, key, extras: Optional[Dict] = None):
         """Run the prompt through the model: returns ``(first_token, cache,
@@ -121,6 +184,10 @@ class Engine:
         prompt token — both exactly as the seed host loop did, so the key
         stream stays bit-compatible across paths.
         """
+        if self._prefill is not None and prompts.shape[1] > self.sc.max_len:
+            raise ValueError(
+                f"prompt length {prompts.shape[1]} exceeds max_len {self.sc.max_len}"
+            )
         batch = {"tokens": jnp.asarray(prompts)}
         if extras:
             batch.update({k: jnp.asarray(v) for k, v in extras.items()})
@@ -140,6 +207,28 @@ class Engine:
                 nxt, cache = self._decode(self.params, tok, cache, sub)
         return nxt, cache, key
 
+    def prime_many(self, prompts, lengths):
+        """Batched masked prefill of one length bucket: ``prompts`` (N, Sb)
+        int32 right-padded to a shared bucket length, ``lengths`` (N,) true
+        prompt lengths.  Returns ``(first_tokens (N, 1), batched cache)`` in a
+        single dispatch; each row is bit-identical to ``prime`` of that row's
+        unpadded prompt.  The cache's scalar ``pos`` holds the padded bucket
+        length — scatter it with ``write_slots`` (which sets per-slot true
+        ``pos``) before decoding.  Prefill LM families only (prefill ignores
+        the PRNG key there; recurrent families prime per request)."""
+        if self._prefill_masked is None:
+            raise NotImplementedError(
+                f"batched masked prefill unsupported for family {self.cfg.family!r}"
+            )
+        prompts = np.asarray(prompts, np.int32)
+        if prompts.shape[1] > self.sc.max_len:
+            raise ValueError(
+                f"bucket length {prompts.shape[1]} exceeds max_len {self.sc.max_len}"
+            )
+        return self._prefill_masked(
+            self.params, {"tokens": jnp.asarray(prompts)}, jnp.asarray(lengths, jnp.int32)
+        )
+
     def decode_segment(self, token, cache, key, steps: int):
         """``steps`` fused decode steps in one dispatch: returns
         ``(tokens (B, steps), last_token, cache, key)``."""
@@ -157,6 +246,14 @@ class Engine:
         and is billed to ``prefill_s``).
         """
         b = prompts.shape[0]
+        if self._prefill is not None and prompts.shape[1] + max_new > self.sc.max_len:
+            # without this, decode past max_len silently overwrites the last
+            # KV row (attention_decode's dynamic_update_slice clamps its
+            # write index) and corrupts every later token
+            raise ValueError(
+                f"prompt({prompts.shape[1]}) + max_new({max_new}) = "
+                f"{prompts.shape[1] + max_new} exceeds max_len {self.sc.max_len}"
+            )
         key = jax.random.key(self.sc.seed)
         t0 = time.time()
         nxt, cache, key = self.prime(prompts, key, extras)

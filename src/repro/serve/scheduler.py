@@ -2,38 +2,51 @@
 
 ``Engine.generate`` serves one fixed batch of equal-length prompts for a
 fixed ``max_new``; real traffic is ragged.  :class:`Scheduler` keeps a fixed
-pool of in-flight *slots* and alternates two phases (DESIGN.md §5):
+pool of in-flight *slots* and alternates two phases (DESIGN.md §5, §6):
 
-  admission   free slots are primed host-side with queued requests whose
-              arrival time has passed (per-slot B=1 prefill, per-request
-              PRNG key), and the primed cache/key/token are written into
-              the slot-stacked state;
+  admission   free slots are filled with queued requests whose arrival time
+              has passed, earliest arrival first.  Arrivals are coalesced
+              per round and grouped into prompt-length buckets: each bucket
+              is primed in ONE batched masked-prefill dispatch
+              (``Engine.prime_many``) and scattered into its slots with ONE
+              donated multi-slot write (``models.cache.write_slots``) —
+              admission of N same-bucket requests costs O(1) dispatches and
+              zero host syncs.  Recurrent families (and
+              ``admission="sequential"``, the measured baseline) fall back
+              to per-request exact-length priming.
   decode      one jitted *segment* — ``segment`` fused ``lax.scan`` steps
               of the whole pool, vmapped over the slot axis — runs on
               device, then syncs once; finished slots (EOS or budget)
-              retire and free up for the next admission round.
+              retire and free up for the next admission round.  First-token
+              EOS/budget checks are deferred to this sync too, so admission
+              itself never blocks on a device->host transfer.
 
 Each slot is an independent B=1 decode cache stacked on a leading slot axis
 (:mod:`repro.models.cache`), with its own scalar ``pos`` and its own PRNG
 key stream seeded from the request.  That makes every completed request's
 tokens bit-identical to a one-shot ``Engine.generate`` of the same prompt,
 seed and temperature at batch 1 — the scheduler changes *when* work runs,
-never *what* it computes.  Free slots decode along with the pool (cheaper
-than masking the hot path); their output is discarded and their state is
-replaced wholesale at the next admission.
+never *what* it computes.  Bucketed prefill preserves this bit-for-bit:
+right-padding keeps every real token's causal window unchanged and padded
+keys are masked to exactly-zero probability (DESIGN.md §6).  Free slots
+decode along with the pool (cheaper than masking the hot path); their
+output is discarded and their state is replaced wholesale at the next
+admission.
 
 The segment length trades sync overhead against retirement latency: the
 pool only retires/admits at segment boundaries, so a slot whose request
 finished mid-segment decodes (and discards) at most ``segment - 1`` extra
 tokens.  The segment shape is static — one compiled program serves the
-whole run regardless of arrival pattern.
+whole run regardless of arrival pattern, and the bucketed prefill programs
+(one per length bucket x batch bucket) serve any traffic shape without
+recompiling.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
-from collections import deque
 from typing import Dict, List, Optional
 
 import jax
@@ -77,7 +90,7 @@ class _Slot:
 
     rid: int = -1
     tokens: Optional[List[int]] = None
-    first: Optional[jax.Array] = None  # deferred first token (device, (1,1))
+    first: Optional[jax.Array] = None  # deferred first token (device, (1, 1))
     remaining: int = 0
     eos_id: Optional[int] = None
     arrival_s: float = 0.0
@@ -91,16 +104,31 @@ class _Slot:
 class Scheduler:
     """Continuous-batching run loop over a fused-decode :class:`Engine`."""
 
-    def __init__(self, engine: Engine, slots: int = 4, segment: int = 8):
+    def __init__(
+        self,
+        engine: Engine,
+        slots: int = 4,
+        segment: int = 8,
+        admission: str = "batched",
+    ):
         if not engine.sc.fused:
             raise ValueError("Scheduler requires a fused-decode engine (ServeConfig.fused)")
         if slots < 1 or segment < 1:
             raise ValueError(f"need slots >= 1 and segment >= 1, got {slots}, {segment}")
+        if admission not in ("batched", "sequential"):
+            raise ValueError(f"admission must be 'batched' or 'sequential', got {admission!r}")
         self.eng = engine
         self.model = engine.model
         self.slots = slots
         self.segment = segment
-        self._queue: deque = deque()  # (rid, Request), FIFO by submit order
+        # "batched" coalesces arrivals into bucketed one-dispatch prefills
+        # (when the family supports masked prefill); "sequential" keeps the
+        # per-request exact-length path as the measured baseline
+        self.admission = admission
+        # (arrival_s, rid, Request), kept sorted by (arrival_s, rid) at
+        # submit time so arrived requests are always a front prefix —
+        # admission pops O(k) per round instead of re-scanning the backlog
+        self._queue: List[tuple] = []
         self._completions: Dict[int, Completion] = {}
         self._next_rid = 0
         self._slot: List[_Slot] = [_Slot() for _ in range(slots)]
@@ -109,11 +137,16 @@ class Scheduler:
         self._cache = self.model.init_slot_cache(slots, engine.sc.max_len)
         self._token = jnp.zeros((slots, 1, 1), jnp.int32)
         self._kdata = jnp.zeros((slots,) + kshape, jnp.uint32)
+        self._batch_axes = self.model.cache_batch_axes(engine.sc.max_len)
         # donate the pool state: segments and admissions update it in place
         self._seg = jax.jit(
             self._segment_fn, static_argnums=(4,), donate_argnums=(1, 2, 3)
         )
         self._write = jax.jit(self._write_fn, donate_argnums=(0, 1, 2))
+        self._write_many = jax.jit(self._write_many_fn, donate_argnums=(0, 1, 2))
+        self._derive_keys = jax.jit(
+            jax.vmap(lambda s: jax.random.key_data(jax.random.key(s)))
+        )
         # run stats
         self._seg_steps = 0
         self._active_slot_steps = 0
@@ -125,6 +158,8 @@ class Scheduler:
     def submit(self, req: Request) -> int:
         """Queue a request; returns its request id."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if req.max_new < 1:  # before the budget check: a negative max_new
+            raise ValueError("max_new must be >= 1")  # could slip past it
         budget = prompt.shape[0] + req.max_new + self.segment
         if budget > self.eng.sc.max_len:
             raise ValueError(
@@ -132,11 +167,11 @@ class Scheduler:
                 f"segment({self.segment}) = {budget} exceeds max_len "
                 f"{self.eng.sc.max_len}"
             )
-        if req.max_new < 1:
-            raise ValueError("max_new must be >= 1")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append((rid, dataclasses.replace(req, prompt=prompt)))
+        bisect.insort(
+            self._queue, (req.arrival_s, rid, dataclasses.replace(req, prompt=prompt))
+        )
         return rid
 
     # -- jitted segment body --------------------------------------------------
@@ -180,10 +215,31 @@ class Scheduler:
 
         return write_slot(cache, i, sub), token.at[i].set(nxt), kdata.at[i].set(kd)
 
-    def _admit(self, i: int, rid: int, req: Request, now: float) -> bool:
-        """Prime request ``rid`` into slot ``i``.  Returns True if the slot is
-        now in flight (False = the request completed at admission: max_new
-        is 1, or the very first token was EOS)."""
+    def _write_many_fn(self, cache, token, kdata, idx, sub, nxt, kds, lengths):
+        """Donated one-dispatch scatter of a whole primed bucket into slots
+        ``idx``: batched caches (per-slot true ``pos`` = lengths), first
+        tokens, and per-request PRNG key data ``kds``.  Batch-bucket padding
+        rows carry an out-of-range index and are dropped; one compilation
+        covers every batch bucket."""
+        from ..models.cache import write_slots
+
+        cache = write_slots(cache, idx, sub, self._batch_axes, lengths)
+        token = token.at[idx].set(nxt[:, :, None], mode="drop")
+        kdata = kdata.at[idx].set(kds.astype(kdata.dtype), mode="drop")
+        return cache, token, kdata
+
+    def _bind_slot(self, i: int, rid: int, req: Request, first, now: float) -> None:
+        slot = self._slot[i]
+        slot.rid, slot.tokens, slot.first = rid, [], first
+        slot.remaining = req.max_new - 1
+        slot.arrival_s, slot.admit_s = req.arrival_s, now
+        slot.eos_id = req.eos_id
+
+    def _admit(self, i: int, rid: int, req: Request, now: float) -> None:
+        """Per-request exact-length admission (recurrent families, and the
+        ``admission="sequential"`` baseline): B=1 prime + single-slot write.
+        First-token EOS/budget checks are deferred to the segment sync, so
+        no device->host transfer happens here."""
         t0 = time.monotonic()
         key = jax.random.key(req.seed)
         nxt, cache, key = self.eng.prime(req.prompt[None], key)
@@ -191,22 +247,68 @@ class Scheduler:
             self._cache, self._token, self._kdata,
             jnp.int32(i), cache, nxt, jax.random.key_data(key),
         )
-        slot = self._slot[i]
-        slot.rid, slot.tokens, slot.first = rid, [], nxt
-        slot.remaining = req.max_new - 1
-        slot.arrival_s, slot.admit_s = req.arrival_s, now
-        slot.eos_id = req.eos_id
-        if req.max_new == 1 or req.eos_id is not None:
-            # these need the first token on the host now; everyone else
-            # collects it at the next segment sync, keeping admission async
-            slot.tokens = [int(np.asarray(nxt)[0, 0])]
-            slot.first = None
-            if slot.remaining == 0 or slot.tokens[0] == req.eos_id:
-                self._admit_s += time.monotonic() - t0
-                self._retire(i, now)
-                return False
+        self._bind_slot(i, rid, req, nxt, now)
         self._admit_s += time.monotonic() - t0
-        return True
+
+    def _admit_batched(self, free: List[int], picked, now: float) -> None:
+        """Coalesced bucketed admission: group this round's arrivals by
+        prompt-length bucket, prime each bucket in one batched masked
+        prefill, scatter each into its slots in one donated write.  The
+        batch dim is padded to a power of two so compile count stays
+        O(len buckets x log2 slots), not O(distinct traffic shapes)."""
+        t0 = time.monotonic()
+        groups: Dict[int, list] = {}
+        for i, (rid, req) in zip(free, picked):
+            groups.setdefault(self.eng.bucket_len(len(req.prompt)), []).append((i, rid, req))
+        for blen, group in groups.items():
+            nb = 1 << (len(group) - 1).bit_length()
+            tokens = np.zeros((nb, blen), np.int32)
+            lengths = np.ones(nb, np.int32)  # padding rows: 1-token dummy
+            idx = np.full(nb, self.slots, np.int32)  # OOB -> dropped by the scatter
+            for j, (i, rid, req) in enumerate(group):
+                tokens[j, : len(req.prompt)] = req.prompt
+                lengths[j] = len(req.prompt)
+                idx[j] = i
+            # per-request PRNG keys: one vmapped derivation when every seed
+            # fits the uint32 word jax.random.key folds it into (bit-exact
+            # there, verified in tests); anything else — wide seeds an int32
+            # array would overflow on, negative seeds whose x64 folding
+            # differs from the uint32 cast — falls back to eager per-request
+            # key creation (still no host sync)
+            seeds = [req.seed for _, _, req in group]
+            if all(0 <= s < 2**32 for s in seeds):
+                packed = np.asarray(
+                    seeds + [0] * (nb - len(group)), np.uint32
+                )
+                kds = self._derive_keys(jnp.asarray(packed))
+            else:
+                zero = jnp.zeros(self._kdata.shape[1:], self._kdata.dtype)
+                kds = jnp.stack(
+                    [jax.random.key_data(jax.random.key(s)) for s in seeds]
+                    + [zero] * (nb - len(group))
+                )
+            nxt, cache = self.eng.prime_many(tokens, lengths)
+            self._cache, self._token, self._kdata = self._write_many(
+                self._cache, self._token, self._kdata,
+                jnp.asarray(idx), cache, nxt, kds, jnp.asarray(lengths),
+            )
+            for j, (i, rid, req) in enumerate(group):
+                self._bind_slot(i, rid, req, nxt[j : j + 1], now)
+        self._admit_s += time.monotonic() - t0
+
+    def _pop_arrived(self, k: int, now: float) -> list:
+        """Take up to ``k`` queued requests whose arrival time has passed,
+        earliest ``arrival_s`` first (submit order breaks ties).  A strict
+        FIFO-by-submit pop would head-of-line block: a free slot would sit
+        idle behind a queue head whose ``arrival_s`` is still in the future
+        even though later-submitted requests have already arrived.  The
+        queue is arrival-sorted, so the arrived set is a front prefix."""
+        n = 0
+        while n < k and n < len(self._queue) and self._queue[n][0] <= now:
+            n += 1
+        picked = [(rid, req) for _, rid, req in self._queue[:n]]
+        del self._queue[:n]
+        return picked
 
     def _retire(self, i: int, now: float) -> Completion:
         slot = self._slot[i]
@@ -238,26 +340,24 @@ class Scheduler:
             return time.monotonic() - t_start
 
         while self._queue or any(s.active for s in self._slot):
-            # admission: fill free slots with arrived requests, FIFO
-            for i, slot in enumerate(self._slot):
-                if not self._queue:
-                    break
-                if slot.active or self._queue[0][1].arrival_s > now():
-                    continue
-                rid, req = self._queue.popleft()
-                while not self._admit(i, rid, req, now()):
-                    if not self._queue or self._queue[0][1].arrival_s > now():
-                        rid = None
-                        break
-                    rid, req = self._queue.popleft()
-                if rid is None:
-                    continue
+            # admission: coalesce this round's arrived requests into free slots
+            t = now()
+            free = [i for i, s in enumerate(self._slot) if not s.active]
+            if free and self._queue:
+                picked = self._pop_arrived(len(free), t)
+                if picked:
+                    if self.admission == "batched" and self.eng.batched_prefill:
+                        self._admit_batched(free[: len(picked)], picked, t)
+                    else:
+                        for i, (rid, req) in zip(free, picked):
+                            self._admit(i, rid, req, t)
             active_idx = [i for i, s in enumerate(self._slot) if s.active]
             if not active_idx:
-                if not self._queue:  # everything completed at admission
-                    continue
-                # nothing in flight: sleep until the head request arrives
-                wait = self._queue[0][1].arrival_s - now()
+                if not self._queue:
+                    continue  # drained; loop condition exits
+                # nothing in flight: sleep until the next request arrives
+                # (the queue head, since the queue is arrival-sorted)
+                wait = self._queue[0][0] - now()
                 if wait > 0:
                     time.sleep(wait)
                 continue
@@ -274,9 +374,17 @@ class Scheduler:
             t = now()
             for i in active_idx:
                 slot = self._slot[i]
-                if slot.first is not None:  # deferred first token, now free
-                    slot.tokens.append(int(np.asarray(slot.first)[0, 0]))
+                if slot.first is not None:
+                    # deferred first token: EOS/budget checked here, at the
+                    # segment sync, never in the admission path
+                    first = int(np.asarray(slot.first).reshape(-1)[0])
+                    slot.tokens.append(first)
                     slot.first = None
+                    if slot.remaining == 0 or (
+                        slot.eos_id is not None and first == slot.eos_id
+                    ):
+                        self._retire(i, t)
+                        continue
                 for tok in toks_np[: min(slot.remaining, self.segment), i]:
                     slot.tokens.append(int(tok))
                     slot.remaining -= 1
@@ -286,9 +394,11 @@ class Scheduler:
         return self._completions
 
     def stats(self) -> Dict[str, float]:
-        """Aggregate serve metrics for the most recent :meth:`run`."""
+        """Aggregate serve metrics for the most recent :meth:`run`.  Latency
+        percentiles are NaN when nothing completed — an empty run must not
+        read as an infinitely fast one."""
         done = sorted(self._completions.values(), key=lambda c: c.rid)
-        lat = np.asarray([c.latency_s for c in done]) if done else np.zeros(1)
+        lat = np.asarray([c.latency_s for c in done])
         decoded = sum(max(len(c.tokens) - 1, 0) for c in done)
         busy = self._decode_s + self._admit_s
         return {
@@ -297,7 +407,7 @@ class Scheduler:
             "sustained_tok_per_s": decoded / max(busy, 1e-9),
             "decode_s": self._decode_s,
             "admit_s": self._admit_s,
-            "latency_p50_s": float(np.percentile(lat, 50)),
-            "latency_p95_s": float(np.percentile(lat, 95)),
+            "latency_p50_s": float(np.percentile(lat, 50)) if done else float("nan"),
+            "latency_p95_s": float(np.percentile(lat, 95)) if done else float("nan"),
             "slot_occupancy": self._active_slot_steps / max(self.slots * self._seg_steps, 1),
         }

@@ -1,0 +1,319 @@
+"""Bucketed batched-prefill admission (DESIGN.md §6): masked-prefill
+bit-parity with unpadded prefill, multi-slot cache scatter, bounded compile
+counts under ragged traffic, head-of-line fixes, and the max_len overflow
+guard."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import Engine, Request, Scheduler, ServeConfig
+
+
+def _params(cfg, seed=0):
+    return build_model(cfg).init(jax.random.key(seed))
+
+
+# ---------------------------------------------------------------------------
+# masked bucketed prefill == unpadded prefill, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "olmoe_1b_7b"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_masked_prefill_bitexact(arch, dtype):
+    """Right-padding to a bucket with true lengths must not change a row's
+    last-token logits or its first ``length`` KV rows — across dense/moe
+    families and dtypes (the invariant bucketed admission rests on)."""
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype=dtype)
+    model = build_model(cfg)
+    params = _params(cfg)
+    rng = np.random.default_rng(0)
+    lens = [3, 5, 7]
+    prompts = [rng.integers(0, 100, n).astype(np.int32) for n in lens]
+    bucket, max_len = 8, 32
+    padded = np.zeros((len(lens), bucket), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, : len(p)] = p
+    logits_b, cache_b = model.prefill(
+        params, {"tokens": jnp.asarray(padded)}, max_len,
+        lengths=jnp.asarray(lens, jnp.int32),
+    )
+    for i, p in enumerate(prompts):
+        logits_1, cache_1 = model.prefill(params, {"tokens": jnp.asarray(p[None])}, max_len)
+        np.testing.assert_array_equal(
+            np.asarray(logits_b[i], np.float32), np.asarray(logits_1[0], np.float32),
+            err_msg=f"row {i} logits",
+        )
+        for leaf in ("k", "v"):  # real KV rows bit-identical; garbage rows masked by pos
+            np.testing.assert_array_equal(
+                np.asarray(cache_b[leaf][:, i, : lens[i]], np.float32),
+                np.asarray(cache_1[leaf][:, 0, : lens[i]], np.float32),
+                err_msg=f"row {i} cache {leaf}",
+            )
+
+
+def test_prime_many_matches_prime():
+    """Engine.prime_many (one batched dispatch) must emit each row's exact
+    ``prime`` first token."""
+    cfg = get_smoke_config("llama3_2_1b")
+    eng = Engine(cfg, _params(cfg), ServeConfig(max_len=64))
+    rng = np.random.default_rng(1)
+    lens = [4, 6, 6, 5]
+    prompts = [rng.integers(0, 100, n).astype(np.int32) for n in lens]
+    bucket = eng.bucket_len(max(lens))
+    padded = np.zeros((len(lens), bucket), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, : len(p)] = p
+    nxt, _ = eng.prime_many(padded, np.asarray(lens))
+    for i, p in enumerate(prompts):
+        one, _, _ = eng.prime(p[None], jax.random.key(0))
+        np.testing.assert_array_equal(np.asarray(nxt[i]), np.asarray(one[0]),
+                                      err_msg=f"row {i}")
+
+
+def test_custom_buckets_always_cover_max_len():
+    """Custom prefill_buckets that stop short of max_len get max_len appended
+    — a longer prompt must map to a bucket, never to an exact-length compile
+    (the unbounded-recompile regression this PR removes)."""
+    cfg = get_smoke_config("llama3_2_1b")
+    eng = Engine(cfg, _params(cfg), ServeConfig(max_len=64, prefill_buckets=(8, 16)))
+    assert eng.prefill_buckets == (8, 16, 64)
+    assert eng.bucket_len(17) == 64
+    with pytest.raises(ValueError, match="prefill_buckets"):
+        Engine(cfg, _params(cfg), ServeConfig(max_len=64, prefill_buckets=(8, 128)))
+
+
+def test_prime_many_rejects_recurrent_family():
+    cfg = get_smoke_config("mamba2_2_7b")
+    eng = Engine(cfg, _params(cfg), ServeConfig(max_len=64))
+    assert not eng.batched_prefill
+    with pytest.raises(NotImplementedError, match="masked prefill"):
+        eng.prime_many(np.ones((2, 8), np.int32), np.asarray([4, 8]))
+
+
+def test_moe_batched_prefill_requires_dropless_capacity():
+    """Capacity-bounded MoE dispatch couples co-batched rows (shared expert
+    capacity decides which tokens drop), so batched admission is only
+    bit-exact — and only enabled — when no token can ever drop."""
+    smoke = get_smoke_config("olmoe_1b_7b")
+    assert smoke.moe_cf >= smoke.n_experts / smoke.top_k  # dropless smoke config
+    eng = Engine(smoke, _params(smoke), ServeConfig(max_len=64))
+    assert eng.batched_prefill
+    droppy = dataclasses.replace(smoke, moe_cf=1.25)
+    eng = Engine(droppy, build_model(droppy).init(jax.random.key(0)),
+                 ServeConfig(max_len=64))
+    assert not eng.batched_prefill  # falls back to per-request admission
+
+
+# ---------------------------------------------------------------------------
+# multi-slot scatter (models/cache.py write_slots)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "mamba2_2_7b", "recurrentgemma_9b"])
+def test_write_slots_scatter_roundtrip(arch):
+    """One donated write_slots of a batched (B=N) cache lands each row in its
+    slot with its own ``pos``, drops out-of-range (padding) rows, and leaves
+    other slots untouched — across cache families (batch axes differ per
+    leaf, located structurally via cache_batch_axes)."""
+    model = build_model(get_smoke_config(arch))
+    max_len, slots = 32, 4
+    axes = model.cache_batch_axes(max_len)
+    subs = [
+        jax.tree.map(lambda leaf: (jnp.zeros_like(leaf) + val).astype(leaf.dtype),
+                     model.init_cache(1, max_len))
+        for val in (1, 2, 3)
+    ]
+    batched = jax.tree.map(
+        lambda ax, *leaves: leaves[0] if ax < 0 else jnp.concatenate(leaves, axis=ax),
+        axes, *subs,
+    )
+    stacked = model.init_slot_cache(slots, max_len)
+    idx = jnp.asarray([2, 0, slots], jnp.int32)  # last row = padding, dropped
+    pos = jnp.asarray([5, 7, 9], jnp.int32)
+    out = model.write_slots(stacked, idx, batched, axes, pos)
+    for slot_i, (row, want_pos) in {2: (0, 5), 0: (1, 7)}.items():
+        got = model.read_slot(out, slot_i)
+        jax.tree.map(
+            lambda ax, g, s: np.testing.assert_array_equal(
+                np.asarray(g, np.float32),
+                np.full_like(np.asarray(g, np.float32), want_pos) if ax < 0
+                else np.asarray(s, np.float32),
+            ),
+            axes, got, subs[row],
+        )
+    for untouched in (1, 3):  # neither slot targeted (the dropped row aimed out of range)
+        jax.tree.map(
+            lambda g, s: np.testing.assert_array_equal(np.asarray(g, np.float32),
+                                                       np.asarray(s, np.float32)),
+            model.read_slot(out, untouched), model.read_slot(stacked, untouched),
+        )
+
+
+# ---------------------------------------------------------------------------
+# compile count: one static program set serves any traffic shape
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_compile_count_bounded_by_buckets():
+    """~10 distinct prompt lengths through the scheduler must compile at most
+    (length buckets used) x (batch buckets) masked-prefill programs — not one
+    per distinct length — and never touch the exact-length prefill."""
+    cfg = get_smoke_config("llama3_2_1b")
+    eng = Engine(cfg, _params(cfg), ServeConfig(max_len=64))
+    sched = Scheduler(eng, slots=4, segment=4)
+    rng = np.random.default_rng(2)
+    lens = list(range(3, 13))  # 10 distinct lengths
+    reqs = [Request(prompt=rng.integers(0, 100, n).astype(np.int32), max_new=6, seed=i)
+            for i, n in enumerate(lens)]
+    done = sched.run(reqs)
+    assert len(done) == len(reqs)
+    len_buckets = {eng.bucket_len(n) for n in lens}
+    batch_buckets = 1 + math.ceil(math.log2(sched.slots))  # nb in {1, 2, 4, ...}
+    n_compiles = eng._prefill_masked._cache_size()
+    assert n_compiles <= len(len_buckets) * batch_buckets, (
+        f"{n_compiles} prefill compiles for {len(len_buckets)} length buckets"
+    )
+    assert n_compiles < len(lens)  # strictly better than one-per-length
+    assert eng._prefill._cache_size() == 0  # exact-length path never taken
+
+
+# ---------------------------------------------------------------------------
+# ragged-traffic smoke: out-of-order arrivals, mixed lengths, EOS-heavy
+# ---------------------------------------------------------------------------
+
+
+def _one_shot(eng, prompt, max_new, seed):
+    eng.sc.seed = seed
+    return eng.generate(prompt[None], max_new=max_new)["tokens"][0]
+
+
+@pytest.mark.parametrize("admission", ["batched", "sequential"])
+def test_ragged_traffic_parity(admission):
+    """Mixed prompt lengths + out-of-order arrivals + EOS-heavy retirement:
+    every completion stays bit-identical to one-shot generate, in both
+    admission modes (the bench_admission A/B arms)."""
+    cfg = get_smoke_config("llama3_2_1b")
+    params = _params(cfg)
+    sc = ServeConfig(max_len=64)
+    ref = Engine(cfg, params, dataclasses.replace(sc))
+    rng = np.random.default_rng(7)
+    lens = [3, 9, 5, 12, 4, 7, 6, 10]
+    prompts = [rng.integers(0, 100, n).astype(np.int32) for n in lens]
+    arrivals = [0.02, 0.0, 0.01, 0.0, 0.03, 0.0, 0.02, 0.01]  # out of submit order
+    reqs = []
+    for i, p in enumerate(prompts):
+        eos = None
+        if i % 2 == 0:  # EOS-heavy: half the requests stop early on a real token
+            one = _one_shot(ref, p, 8, seed=i)
+            eos = int(one[2])
+        reqs.append(Request(prompt=p, max_new=8, eos_id=eos, seed=i,
+                            arrival_s=arrivals[i]))
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)),
+                      slots=3, segment=4, admission=admission)
+    done = sched.run(reqs)
+    assert sorted(done) == list(range(len(reqs)))
+    for rid, c in done.items():
+        one = _one_shot(ref, prompts[rid], 8, seed=rid)
+        if reqs[rid].eos_id is not None and (one == reqs[rid].eos_id).any():
+            one = one[: int(np.argmax(one == reqs[rid].eos_id)) + 1]
+        np.testing.assert_array_equal(c.tokens, one, err_msg=f"rid {rid}")
+
+
+def test_admission_coalesces_same_bucket_dispatches():
+    """N same-bucket arrivals admitted in one round must cost O(1) batched
+    prefill dispatches, not N — measured via the masked-prefill compile
+    cache (all four land in one (bucket, batch-bucket) program)."""
+    cfg = get_smoke_config("llama3_2_1b")
+    eng = Engine(cfg, _params(cfg), ServeConfig(max_len=64))
+    sched = Scheduler(eng, slots=4, segment=4)
+    rng = np.random.default_rng(8)
+    reqs = [Request(prompt=rng.integers(0, 100, 5 + i % 3).astype(np.int32),
+                    max_new=4, seed=i) for i in range(4)]
+    done = sched.run(reqs)
+    assert len(done) == 4
+    assert eng._prefill_masked._cache_size() == 1  # one (8, nb=4) program
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions
+# ---------------------------------------------------------------------------
+
+
+def test_generate_overflow_raises():
+    """Decode past max_len used to clamp the KV write index and silently
+    overwrite the last cache row; now it fails loudly up front."""
+    cfg = get_smoke_config("llama3_2_1b")
+    eng = Engine(cfg, _params(cfg), ServeConfig(max_len=32))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(np.ones((1, 8), np.int32), max_new=30)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.prime(np.ones((1, 40), np.int32), jax.random.key(0))
+    # the boundary case still serves
+    out = eng.generate(np.ones((1, 8), np.int32), max_new=24)
+    assert out["tokens"].shape == (1, 24)
+
+
+def test_generate_overflow_allows_recurrent():
+    """SSM state is O(1) in sequence length — no KV cache to overflow, so the
+    guard must not fire for recurrent families."""
+    cfg = get_smoke_config("mamba2_2_7b")
+    eng = Engine(cfg, _params(cfg), ServeConfig(max_len=16))
+    out = eng.generate(np.ones((1, 8), np.int32), max_new=12)
+    assert out["tokens"].shape == (1, 12)
+
+
+def test_no_head_of_line_blocking_on_future_arrival():
+    """A free slot must serve the earliest *arrived* request: the strict-FIFO
+    head (arriving far in the future) used to idle the whole pool."""
+    cfg = get_smoke_config("llama3_2_1b")
+    params = _params(cfg)
+    sched = Scheduler(Engine(cfg, params, ServeConfig(max_len=64)), slots=1, segment=4)
+    rng = np.random.default_rng(9)
+    late = Request(prompt=rng.integers(0, 100, 5).astype(np.int32), max_new=4,
+                   seed=0, arrival_s=0.35)
+    early = Request(prompt=rng.integers(0, 100, 5).astype(np.int32), max_new=4,
+                    seed=1, arrival_s=0.0)
+    done = sched.run([late, early])  # head (rid 0) arrives last
+    assert done[1].admit_s < late.arrival_s, "later-submitted arrival was blocked"
+    assert done[1].finish_s <= done[0].admit_s
+    assert done[0].admit_s >= late.arrival_s
+
+
+@pytest.mark.parametrize("seed", [2**31 + 5, 2**40 + 9, -7])
+def test_batched_admission_accepts_wide_seeds(seed):
+    """Seeds past int32 range (and negative ones) must survive batched
+    admission — derived via jax.random.key's own folding, never squeezed
+    through an int32 array — and stay bit-identical to one-shot generate
+    (2**31+5 takes the vmapped uint32 path; 2**40+9 and -7 the eager
+    fallback — negative seeds fold differently under jax_enable_x64)."""
+    cfg = get_smoke_config("llama3_2_1b")
+    params = _params(cfg)
+    sc = ServeConfig(max_len=64, temperature=1.0)
+    rng = np.random.default_rng(11)
+    p = rng.integers(0, 100, 5).astype(np.int32)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=2, segment=4)
+    done = sched.run([Request(prompt=p, max_new=8, seed=seed)])
+    ref = Engine(cfg, params, dataclasses.replace(sc))
+    np.testing.assert_array_equal(done[0].tokens, _one_shot(ref, p, 8, seed=seed))
+
+
+def test_stats_nan_when_nothing_completed():
+    """An empty run must report NaN latency percentiles, not a fabricated 0.0
+    (which reads as an infinitely fast server)."""
+    cfg = get_smoke_config("llama3_2_1b")
+    sched = Scheduler(Engine(cfg, _params(cfg), ServeConfig(max_len=64)),
+                      slots=1, segment=4)
+    sched.run([])
+    s = sched.stats()
+    assert s["requests"] == 0
+    assert math.isnan(s["latency_p50_s"]) and math.isnan(s["latency_p95_s"])
+    assert s["sustained_tok_per_s"] == 0.0

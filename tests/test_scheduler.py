@@ -162,8 +162,9 @@ def test_queued_request_admitted_mid_stream(llama):
 
 
 def test_instant_completion_at_admission(llama):
-    """max_new=1 (and first-token EOS) complete at admission without ever
-    occupying a decode slot segment."""
+    """max_new=1 (and first-token EOS) requests complete with just their
+    deferred first token — retired at the first segment sync, with no
+    admission-time host transfer."""
     cfg, params = llama
     sc = ServeConfig(max_len=64)
     ref_eng = Engine(cfg, params, dataclasses.replace(sc))
