@@ -344,6 +344,86 @@ def bench_decode_fused():
           f"fused_tok_s={runs[True]['tok_per_s']:.0f};speedup={speedup:.2f}x")
 
 
+def bench_packed_decode():
+    """Fused packed-MLP megakernel vs the 3-dispatch packed path, and
+    whole-model packing vs MLP-only, on the decode hot loop (DESIGN.md §7).
+
+    Three packed engines serve the same pruned smoke model: ``split3`` is
+    the seed 3-dispatch MLP-only path (one Pallas call per MLP matrix, the
+    (B, ff) intermediate round-trips between them), ``fused`` runs the
+    megakernel (one call per layer), ``whole`` additionally packs qkv/o and
+    the untied LM head.  Token streams must be identical to the dense
+    engine; arms are interleaved best-of-N so machine noise hits them
+    alike.  Also reports the packed/dense weight-byte ratios, the paper's
+    actual currency."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.pruning import prune_tree
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+    from repro.serve.packed import packed_byte_ratios
+
+    cfg = get_smoke_config("vusa_edge")
+    params = prune_tree(build_model(cfg).init(jax.random.key(0)), 0.85)
+    prompts = np.ones((2, 6), np.int32)
+    max_new = 64
+    engines = {
+        "dense": Engine(cfg, params, ServeConfig(max_len=128)),
+        "split3": Engine(
+            cfg, params, ServeConfig(max_len=128, packed_weights="mlp", fused_mlp=False)
+        ),
+        "fused": Engine(cfg, params, ServeConfig(max_len=128, packed_weights="mlp")),
+        "whole": Engine(cfg, params, ServeConfig(max_len=128, packed_weights="all")),
+    }
+    # tune the fused shape before the engines trace: apply_fused_mlp consults
+    # the autotune cache at trace time, so the winner reaches the megakernel
+    import jax.numpy as jnp
+    from repro.kernels.ops import RowPackedLinear, autotune_fused_mlp
+
+    mlp = engines["fused"]._packed["mlp"]
+
+    def layer0(e):  # one layer of the stacked pack, job-padding included
+        return RowPackedLinear(
+            values=e["values"][0], positions=e["positions"][0],
+            k=e["k"], c=e["c"], a=e["a"], m=e["m"],
+        )
+
+    k_blk = autotune_fused_mlp(
+        jnp.ones((prompts.shape[0], cfg.d_model), jnp.float32),
+        layer0(mlp["w_gate"]), layer0(mlp["w_up"]), layer0(mlp["w_down_t"]),
+    )
+    toks = {}
+    for name, eng in engines.items():  # compile + parity check
+        toks[name] = eng.generate(prompts, max_new=max_new)["tokens"]
+        assert (toks[name] == toks["dense"]).all(), f"{name} decode diverged from dense"
+    best = {n: 0.0 for n in engines}
+    for _ in range(6):  # interleave trials so noise hits every arm alike
+        for name, eng in engines.items():
+            out = eng.generate(prompts, max_new=max_new)
+            best[name] = max(best[name], out["tok_per_s"])
+    fused_speedup = best["fused"] / best["split3"]
+    whole_vs_mlp = best["whole"] / best["fused"]
+    ratios = packed_byte_ratios(engines["whole"]._packed)
+    _save("bench_packed_decode", {
+        "split3_tok_per_s": best["split3"],
+        "fused_tok_per_s": best["fused"],
+        "whole_tok_per_s": best["whole"],
+        "dense_tok_per_s": best["dense"],
+        "fused_speedup": fused_speedup,
+        "whole_vs_mlp": whole_vs_mlp,
+        "byte_ratio_total": ratios["total"],
+        "byte_ratios": ratios,
+        "fused_k_blk": k_blk,
+        "batch": int(prompts.shape[0]),
+        "max_new": max_new,
+    })
+    _emit("bench_packed_decode", 1e6 / max(best["fused"], 1e-9),
+          f"split3_tok_s={best['split3']:.0f};fused_tok_s={best['fused']:.0f};"
+          f"whole_tok_s={best['whole']:.0f};fused_speedup={fused_speedup:.2f}x;"
+          f"whole_vs_mlp={whole_vs_mlp:.2f}x;bytes={ratios['total']:.3f}")
+
+
 def bench_continuous_batching():
     """Continuous-batching scheduler vs one-shot fused batches at equal slot
     count: 16 requests, ragged Poisson arrivals, ragged prompt lengths and
@@ -624,6 +704,7 @@ BENCHES = {
     "bench_scheduler": bench_scheduler,
     "bench_train_decode": bench_train_decode,
     "bench_decode_fused": bench_decode_fused,
+    "bench_packed_decode": bench_packed_decode,
     "bench_continuous_batching": bench_continuous_batching,
     "bench_admission": bench_admission,
 }
@@ -640,10 +721,18 @@ BENCHES = {
 # stable and committed as measured.  Both bench_admission entries are such
 # floors (its sequential arm is dispatch-bound and the noisiest measurement
 # here): a structural loss of admission batching still lands well below
-# them, while scheduler-level jitter does not.
+# them, while scheduler-level jitter does not.  bench_packed_decode's three
+# entries are likewise conservative floors of idle best-of-N measurements
+# (fused_speedup observed 1.26-1.50x idle, committed 1.25, gate floor
+# 0.94 at the CI-wide 0.25 tolerance): the floor catches an *inversion* —
+# the megakernel running slower than the 3-dispatch path it replaces —
+# while co-tenant noise (observed down to 1.11 under load) does not trip
+# it; a mere loss of the fused advantage to ~1.0x needs the idle-machine
+# bench run, not CI, to show up.
 BASELINE_METRICS = {
     "bench_decode_fused": ["fused_tok_per_s", "speedup"],
     "kernel_vusa_packed": ["sparsity_0.85/kernel_speedup"],
+    "bench_packed_decode": ["fused_tok_per_s", "fused_speedup", "whole_tok_per_s"],
     "bench_continuous_batching": ["sched_tok_per_s", "speedup_vs_oneshot"],
     "bench_admission": ["batched_tok_per_s", "speedup_vs_sequential"],
 }

@@ -1,9 +1,10 @@
 """Quickstart: the full VUSA loop in two minutes on CPU.
 
 1. train a tiny LM with iterative magnitude pruning to 85 % sparsity,
-2. pack its MLP weights into the paper's row-wise VUSA format,
-3. serve it with the packed Pallas kernel,
-4. check: identical greedy outputs, ~3x fewer weight bytes.
+2. pack its whole decode step (MLP + qkv/o + LM head) into the paper's
+   row-wise VUSA format,
+3. serve it with the Pallas kernels (fused packed-MLP megakernel),
+4. check: identical greedy outputs, ~2.5x fewer weight bytes.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -33,25 +34,22 @@ def main():
     out = Trainer(cfg, tc).train()
     print(f"final loss {out['final_loss']:.3f}, sparsity {out['sparsity']:.2%}")
 
-    print("\n== serving: dense vs VUSA-packed ==")
+    print("\n== serving: dense vs whole-model VUSA-packed ==")
     prompts = np.ones((2, 8), np.int32)
     dense = Engine(cfg, out["params"], ServeConfig(max_len=64)).generate(prompts, max_new=12)
-    packed_eng = Engine(cfg, out["params"], ServeConfig(max_len=64, packed_mlp=True))
+    packed_eng = Engine(cfg, out["params"], ServeConfig(max_len=64, packed_weights="all"))
     packed = packed_eng.generate(prompts, max_new=12)
 
     match = (dense["tokens"] == packed["tokens"]).all()
     print(f"greedy outputs identical: {match}")
     assert match
 
-    total_packed = total_dense = 0
-    for name in ("w_gate", "w_up", "w_down"):
-        v = packed_eng._packed[name]["values"]
-        total_packed += v.size * (v.dtype.itemsize + 1)
-        total_dense += (
-            v.shape[0] * packed_eng._packed[name]["k"] * packed_eng._packed[name]["c"]
-            * v.dtype.itemsize
-        )
-    print(f"MLP weight bytes: packed/dense = {total_packed / total_dense:.3f}")
+    from repro.serve.packed import packed_byte_ratios
+
+    ratios = packed_byte_ratios(packed_eng._packed)
+    print(f"decode-step weight bytes: packed/dense = {ratios['total']:.3f} "
+          f"(mlp {ratios['w_gate']:.2f}, attn {ratios['wq']:.2f}, head "
+          f"{ratios.get('lm_head', float('nan')):.2f})")
     print(
         f"growth model check: P(row of 128 fits 16 slots @ 85% sparsity) = "
         f"{p_grow(1, 128, 16, 0.15):.3f} (1 job almost never suffices -> expect ~2-3 jobs)"

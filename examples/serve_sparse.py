@@ -30,28 +30,24 @@ def main():
     params = prune_tree(model.init(jax.random.key(0)), args.sparsity)
     prompts = np.tile(np.arange(8, dtype=np.int32), (args.batch, 1)) % cfg.vocab
 
-    for packed in (False, True):
-        eng = Engine(cfg, params, ServeConfig(max_len=128, packed_mlp=packed))
+    from repro.serve.packed import packed_byte_ratios
+
+    tokens = {}
+    for packed in (False, "all"):
+        eng = Engine(cfg, params, ServeConfig(max_len=128, packed_weights=packed))
         out = eng.generate(prompts, max_new=args.new)
+        tokens[packed] = out["tokens"]
         label = "VUSA-packed" if packed else "dense      "
         print(
             f"{label}: prefill {out['prefill_s']*1e3:6.1f}ms  "
             f"decode {out['decode_s']*1e3:6.1f}ms  {out['tok_per_s']:6.0f} tok/s"
         )
         if packed:
-            total_packed = total_dense = 0
-            for name in ("w_gate", "w_up", "w_down"):
-                v = eng._packed[name]["values"]
-                total_packed += v.size * (v.dtype.itemsize + 1)
-                total_dense += (
-                    v.shape[0] * eng._packed[name]["k"] * eng._packed[name]["c"] * v.dtype.itemsize
-                )
-            print(f"             weight bytes packed/dense = {total_packed/total_dense:.3f} "
-                  f"@ {args.sparsity:.0%} sparsity")
-            tokens_packed = out["tokens"]
-        else:
-            tokens_dense = out["tokens"]
-    assert (tokens_dense == tokens_packed).all(), "packed serving diverged!"
+            ratios = packed_byte_ratios(eng._packed)
+            print(f"             decode-step weight bytes packed/dense = "
+                  f"{ratios['total']:.3f} @ {args.sparsity:.0%} sparsity "
+                  f"(whole model: mlp + qkv/o + head)")
+    assert (tokens[False] == tokens["all"]).all(), "packed serving diverged!"
     print("outputs identical: True")
 
     # continuous batching over ragged traffic (DESIGN.md §5-§6): same packed
@@ -60,7 +56,7 @@ def main():
     # backfilled as requests retire
     from repro.serve import Request, Scheduler
 
-    eng = Engine(cfg, params, ServeConfig(max_len=128, packed_mlp=True))
+    eng = Engine(cfg, params, ServeConfig(max_len=128, packed_weights="all"))
     sched = Scheduler(eng, slots=args.batch, segment=8)
     rng = np.random.default_rng(0)
     budget_cap = 128 - 8 - 8  # max_len - longest prompt - segment

@@ -25,7 +25,7 @@ from .vusa import Job, mac_assignment, schedule_matrix
 __all__ = [
     "ExactPacked", "pack_exact", "unpack_exact",
     "BlockPacked", "pack_blocks", "unpack_blocks",
-    "RowPacked", "pack_rows", "unpack_rows",
+    "RowPacked", "pack_rows", "pack_rows_t", "unpack_rows",
 ]
 
 
@@ -238,6 +238,19 @@ def pack_rows(w: np.ndarray, m: int = 128, a: int = 16) -> RowPacked:
                 values[ti, r, : len(pos)] = blk[r, pos]
                 positions[ti, r, : len(pos)] = pos.astype(np.int8)
     return RowPacked(k=k, c=c, m=m, a=a, values=values, row_positions=positions)
+
+
+def pack_rows_t(w: np.ndarray, m: int = 128, a: int = 16) -> RowPacked:
+    """Row-pack ``w`` *transposed*: windows cover ``w``'s leading dim.
+
+    For a down-projection ``w_down`` of shape (ff, d) the fused MLP kernel
+    (DESIGN.md §7) needs ff — ``w_down``'s *reduction* dim — to be the
+    windowed lane dim, so the window that produced a ``(B, m)`` slice of the
+    hidden state can immediately consume it: ``pack_rows_t(w_down)`` packs
+    the (d, ff) transpose, and reconstructing window ``t`` yields the dense
+    ``(d, m)`` tile whose lanes are ``w_down`` rows ``[t*m, (t+1)*m)``.
+    ``unpack_rows`` of the result therefore returns ``w.T``."""
+    return pack_rows(np.ascontiguousarray(np.asarray(w).T), m=m, a=a)
 
 
 def unpack_rows(p: RowPacked) -> np.ndarray:

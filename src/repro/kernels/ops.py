@@ -27,10 +27,14 @@ __all__ = [
     "matmul",
     "RowPackedLinear",
     "pack_linear_rows",
+    "pack_linear_rows_t",
     "apply_row_packed",
     "apply_row_packed_ref",
     "choose_k_blk",
     "autotune_row_packed",
+    "apply_fused_mlp",
+    "apply_fused_mlp_ref",
+    "autotune_fused_mlp",
 ]
 
 
@@ -113,9 +117,13 @@ def matmul(x: jax.Array, w: jax.Array, *, interpret: bool | None = None) -> jax.
 import os  # noqa: E402
 import time  # noqa: E402
 
-from ..core.packing import RowPacked, pack_rows  # noqa: E402
-from .ref import vusa_packed_ref  # noqa: E402
-from .vusa_packed import DEFAULT_SLOT_CHUNK, vusa_packed_matmul  # noqa: E402
+from ..core.packing import RowPacked, pack_rows, pack_rows_t  # noqa: E402
+from .ref import vusa_fused_mlp_ref, vusa_packed_ref  # noqa: E402
+from .vusa_packed import (  # noqa: E402
+    DEFAULT_SLOT_CHUNK,
+    vusa_fused_mlp_matmul,
+    vusa_packed_matmul,
+)
 
 
 @dataclasses.dataclass
@@ -148,6 +156,20 @@ def pack_linear_rows(w: np.ndarray, m: int = 128, a: int = 16) -> RowPackedLinea
     )
 
 
+def pack_linear_rows_t(w: np.ndarray, m: int = 128, a: int = 16) -> RowPackedLinear:
+    """Row-pack ``w`` *transposed* — windows cover ``w``'s leading (reduction)
+    dim, the operand shape ``vusa_fused_mlp_matmul`` wants for ``w_down``."""
+    rp: RowPacked = pack_rows_t(np.asarray(w), m=m, a=a)
+    return RowPackedLinear(
+        values=jnp.asarray(rp.values),
+        positions=jnp.asarray(rp.row_positions),
+        k=rp.k,
+        c=rp.c,
+        a=a,
+        m=m,
+    )
+
+
 # -- k_blk / m tuning ------------------------------------------------------
 #
 # The kernel's only free parameters are the K block (bounds the one-hot
@@ -167,6 +189,23 @@ def _kblk_candidates(k: int):
     return c or [k]
 
 
+def _largest_divisor_leq(k: int, blk: int) -> int:
+    """Largest divisor of ``k`` that is <= ``blk``, in O(sqrt k).
+
+    The seed snapped ``REPRO_VUSA_KBLK`` down one step at a time
+    (``while k % blk: blk -= 1``) — O(k) when the override lands just above
+    a small divisor of a large prime-ish K."""
+    blk = max(1, min(blk, k))
+    best = 1
+    for i in range(1, int(k**0.5) + 1):
+        if k % i == 0:
+            if i <= blk:
+                best = max(best, i)
+            if k // i <= blk:
+                best = max(best, k // i)
+    return best
+
+
 def choose_k_blk(k: int, slots: int, m: int) -> int:
     """Pick the K block without measuring.
 
@@ -183,10 +222,7 @@ def choose_k_blk(k: int, slots: int, m: int) -> int:
             blk = int(env)
         except ValueError as e:
             raise ValueError(f"REPRO_VUSA_KBLK must be an integer, got {env!r}") from e
-        blk = max(1, min(blk, k))
-        while k % blk:  # snap down to the largest divisor of k
-            blk -= 1
-        return blk
+        return _largest_divisor_leq(k, blk)  # snap down to a divisor of k
     cands = _kblk_candidates(k)
     if not on_tpu():
         return cands[-1]
@@ -197,26 +233,40 @@ def choose_k_blk(k: int, slots: int, m: int) -> int:
     return best
 
 
-def _tune_key(xf: jax.Array, p: RowPackedLinear, interp: bool):
+def _tune_key(
+    xf: jax.Array, p: RowPackedLinear, interp: bool, reconstruct: str, slot_chunk: int
+):
+    # reconstruct/slot_chunk are part of the key: a k_blk tuned for the
+    # one-pass "onehot" reconstruction is generally wrong for the per-slot
+    # "loop" baseline (and vice versa) — the seed omitted both, so a cache
+    # entry from one mode silently drove the other
     return (
         xf.shape[-1], p.values.shape[2], p.m, xf.shape[0],
         str(p.values.dtype), interp, jax.default_backend(),
+        reconstruct, slot_chunk,
     )
 
 
 def autotune_row_packed(
-    x: jax.Array, p: RowPackedLinear, *, interpret: bool | None = None, iters: int = 5
+    x: jax.Array,
+    p: RowPackedLinear,
+    *,
+    interpret: bool | None = None,
+    iters: int = 5,
+    reconstruct: str = "onehot",
+    slot_chunk: int = DEFAULT_SLOT_CHUNK,
 ) -> int:
     """Time the kernel over k_blk candidates; cache + return the winner."""
     interp = (not on_tpu()) if interpret is None else interpret
     xf = x.reshape(-1, x.shape[-1])
-    key = _tune_key(xf, p, interp)
+    key = _tune_key(xf, p, interp, reconstruct, slot_chunk)
     if key in _KBLK_CACHE:
         return _KBLK_CACHE[key]
     best_blk, best_t = None, float("inf")
     for blk in _kblk_candidates(xf.shape[-1]):
         f = lambda a: vusa_packed_matmul(
-            a, p.values, p.positions, m=p.m, k_blk=blk, interpret=interp
+            a, p.values, p.positions, m=p.m, k_blk=blk, interpret=interp,
+            reconstruct=reconstruct, slot_chunk=slot_chunk,
         )
         f(xf).block_until_ready()  # compile
         t0 = time.perf_counter()
@@ -236,6 +286,7 @@ def apply_row_packed(
     interpret: bool | None = None,
     k_blk: int | None = None,
     reconstruct: str = "onehot",
+    slot_chunk: int = DEFAULT_SLOT_CHUNK,
 ) -> jax.Array:
     """y = x @ W for row-packed W.  x: (..., K) -> (..., C).
 
@@ -251,7 +302,9 @@ def apply_row_packed(
         if os.environ.get("REPRO_VUSA_KBLK"):  # explicit override beats the cache
             k_blk = choose_k_blk(k, slots, p.m)
         else:
-            k_blk = _KBLK_CACHE.get(_tune_key(xf, p, interp)) or choose_k_blk(k, slots, p.m)
+            k_blk = _KBLK_CACHE.get(
+                _tune_key(xf, p, interp, reconstruct, slot_chunk)
+            ) or choose_k_blk(k, slots, p.m)
     k_blk = min(k_blk, k)
     while k % k_blk:
         k_blk //= 2
@@ -263,6 +316,7 @@ def apply_row_packed(
         k_blk=max(k_blk, 1),
         interpret=interp,
         reconstruct=reconstruct,
+        slot_chunk=slot_chunk,
     )
     return y[..., : p.c].reshape(*lead, p.c).astype(x.dtype)
 
@@ -272,3 +326,137 @@ def apply_row_packed_ref(x: jax.Array, p: RowPackedLinear) -> jax.Array:
     xf = x.reshape(-1, x.shape[-1])
     y = vusa_packed_ref(xf, p.values, p.positions)
     return y[..., : p.c].reshape(*lead, p.c).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Fused packed MLP (DESIGN.md §7): silu(x@Wg) * (x@Wu) @ Wd in one kernel
+# --------------------------------------------------------------------------
+
+
+def _check_fused_packs(
+    k: int, gate: RowPackedLinear, up: RowPackedLinear, down_t: RowPackedLinear
+) -> None:
+    assert gate.k == k and up.k == k, (gate.k, up.k, k)
+    assert gate.m == up.m == down_t.m, (gate.m, up.m, down_t.m)
+    assert gate.c == up.c == down_t.c, (gate.c, up.c, down_t.c)  # all windowed over ff
+    t = gate.values.shape[0]
+    assert up.values.shape[0] == t and down_t.values.shape[0] == t
+
+
+def _fused_tune_key(
+    xf: jax.Array,
+    gate: RowPackedLinear,
+    up: RowPackedLinear,
+    down_t: RowPackedLinear,
+    interp: bool,
+    reconstruct: str,
+    slot_chunk: int,
+):
+    return (
+        "fused", xf.shape[-1], down_t.k, xf.shape[0],
+        gate.values.shape[2], up.values.shape[2], down_t.values.shape[2], gate.m,
+        str(gate.values.dtype), interp, jax.default_backend(), reconstruct, slot_chunk,
+    )
+
+
+def autotune_fused_mlp(
+    x: jax.Array,
+    gate: RowPackedLinear,
+    up: RowPackedLinear,
+    down_t: RowPackedLinear,
+    *,
+    interpret: bool | None = None,
+    iters: int = 5,
+    reconstruct: str = "onehot",
+    slot_chunk: int = DEFAULT_SLOT_CHUNK,
+) -> int:
+    """Time the fused megakernel over k_blk candidates; cache the winner.
+
+    The fused shape is its own tuning problem — its k_blk chunks *both* the
+    d_model reduction of gate/up and the d_model output rows of the down
+    accumulation, so the row-packed winner does not transfer."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    xf = x.reshape(-1, x.shape[-1])
+    _check_fused_packs(xf.shape[-1], gate, up, down_t)
+    key = _fused_tune_key(xf, gate, up, down_t, interp, reconstruct, slot_chunk)
+    if key in _KBLK_CACHE:
+        return _KBLK_CACHE[key]
+    best_blk, best_t = None, float("inf")
+    for blk in sorted(set(_kblk_candidates(xf.shape[-1]) + _kblk_candidates(down_t.k))):
+        f = lambda a: vusa_fused_mlp_matmul(
+            a, gate.values, gate.positions, up.values, up.positions,
+            down_t.values, down_t.positions, m=gate.m, k_blk=blk,
+            interpret=interp, reconstruct=reconstruct, slot_chunk=slot_chunk,
+        )
+        f(xf).block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            f(xf).block_until_ready()
+        dt = (time.perf_counter() - t0) / iters
+        if dt < best_t:
+            best_blk, best_t = blk, dt
+    _KBLK_CACHE[key] = best_blk
+    return best_blk
+
+
+def apply_fused_mlp(
+    x: jax.Array,
+    gate: RowPackedLinear,
+    up: RowPackedLinear,
+    down_t: RowPackedLinear,
+    *,
+    interpret: bool | None = None,
+    k_blk: int | None = None,
+    reconstruct: str = "onehot",
+    slot_chunk: int = DEFAULT_SLOT_CHUNK,
+) -> jax.Array:
+    """Whole SwiGLU MLP through the fused megakernel.
+
+    ``gate``/``up`` row-pack (K, ff); ``down_t`` row-packs ``w_down``
+    transposed (``pack_linear_rows_t``) so the ff reduction is windowed.
+    x: (..., K) -> (..., D) where D = ``down_t.k``.  One ``pallas_call``
+    replaces the gate/up/down dispatch triple and the (..., ff) intermediate
+    stays in VMEM.  ``k_blk=None`` consults the autotune cache (populated by
+    ``autotune_fused_mlp``), falling back to ``choose_k_blk``; unlike the
+    plain row-packed kernel the chunk size need not divide K."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    k = xf.shape[-1]
+    _check_fused_packs(k, gate, up, down_t)
+    if k_blk is None:
+        slots = max(gate.values.shape[2], up.values.shape[2], down_t.values.shape[2])
+        if os.environ.get("REPRO_VUSA_KBLK"):  # explicit override beats the cache
+            k_blk = choose_k_blk(k, slots, gate.m)
+        else:
+            k_blk = _KBLK_CACHE.get(
+                _fused_tune_key(xf, gate, up, down_t, interp, reconstruct, slot_chunk)
+            ) or choose_k_blk(k, slots, gate.m)
+    y = vusa_fused_mlp_matmul(
+        xf,
+        gate.values,
+        gate.positions,
+        up.values,
+        up.positions,
+        down_t.values,
+        down_t.positions,
+        m=gate.m,
+        k_blk=max(int(k_blk), 1),
+        interpret=interp,
+        reconstruct=reconstruct,
+        slot_chunk=slot_chunk,
+    )
+    return y.reshape(*lead, down_t.k).astype(x.dtype)
+
+
+def apply_fused_mlp_ref(
+    x: jax.Array, gate: RowPackedLinear, up: RowPackedLinear, down_t: RowPackedLinear
+) -> jax.Array:
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    _check_fused_packs(xf.shape[-1], gate, up, down_t)
+    y = vusa_fused_mlp_ref(
+        xf, gate.values, gate.positions, up.values, up.positions,
+        down_t.values, down_t.positions, m=gate.m,
+    )
+    return y.reshape(*lead, down_t.k).astype(x.dtype)

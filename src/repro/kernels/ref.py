@@ -7,9 +7,10 @@ composed give end-to-end ``x @ W`` equality (see tests/test_kernels.py).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["dense_matmul_ref", "vusa_spmm_ref", "vusa_packed_ref"]
+__all__ = ["dense_matmul_ref", "vusa_spmm_ref", "vusa_packed_ref", "vusa_fused_mlp_ref"]
 
 
 def dense_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
@@ -38,10 +39,39 @@ def vusa_packed_ref(x: jnp.ndarray, values: jnp.ndarray, positions: jnp.ndarray)
     x: (B, K); values/positions: (T, K, S) with int8 lane positions
     (-1 = idle slot).  Returns (B, T*128) fp32.
     """
-    t, k, s = values.shape
-    m = 128
+    return jnp.einsum(
+        "bk,kc->bc", x.astype(jnp.float32), _unpack_dense(values, positions)
+    )
+
+
+def _unpack_dense(values: jnp.ndarray, positions: jnp.ndarray, m: int = 128) -> jnp.ndarray:
+    """Row-pack -> dense (K, T*m) fp32 (shared by both oracles)."""
+    t, k, _ = values.shape
     lanes = jnp.arange(m, dtype=jnp.int32)
     onehot = (positions.astype(jnp.int32)[..., None] == lanes).astype(jnp.float32)
-    w = jnp.einsum("tks,tksm->tkm", values.astype(jnp.float32), onehot)  # (T,K,M)
-    w = w.transpose(1, 0, 2).reshape(k, t * m)
-    return jnp.einsum("bk,kc->bc", x.astype(jnp.float32), w)
+    w = jnp.einsum("tks,tksm->tkm", values.astype(jnp.float32), onehot)
+    return w.transpose(1, 0, 2).reshape(k, t * m)
+
+
+def vusa_fused_mlp_ref(
+    x: jnp.ndarray,
+    gate_values: jnp.ndarray,
+    gate_positions: jnp.ndarray,
+    up_values: jnp.ndarray,
+    up_positions: jnp.ndarray,
+    down_values: jnp.ndarray,
+    down_positions: jnp.ndarray,
+    m: int = 128,
+) -> jnp.ndarray:
+    """Fused SwiGLU MLP oracle over row-packed operands, pure jnp.
+
+    ``gate``/``up`` pack (K, ff); ``down`` packs ``w_down`` *transposed*
+    (D, ff) so the ff reduction dim is the windowed one — exactly the
+    operands of ``vusa_fused_mlp_matmul``.  Returns (B, D) fp32.
+    """
+    wg = _unpack_dense(gate_values, gate_positions, m)  # (K, T*m)
+    wu = _unpack_dense(up_values, up_positions, m)
+    wdt = _unpack_dense(down_values, down_positions, m)  # (D, T*m) = w_down.T padded
+    xf = x.astype(jnp.float32)
+    h = jax.nn.silu(xf @ wg) * (xf @ wu)  # (B, T*m)
+    return h @ wdt.T

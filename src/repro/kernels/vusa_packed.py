@@ -36,6 +36,14 @@ VMEM per step: x (B, K_blk), vals (K_blk, J*A), pos (K_blk, J*A),
 one-hot scratch (K_blk, J*A, M) for "onehot", reconstructed W (K_blk, M)
 fp32, acc (B, M) fp32.  ``k_blk`` is the knob that bounds the scratch —
 see ``repro.kernels.ops.choose_k_blk``.
+
+``vusa_fused_mlp_matmul`` is the whole-MLP megakernel (DESIGN.md §7): one
+``pallas_call`` whose grid walks the ff windows.  Each step reconstructs
+that window's ``w_gate`` and ``w_up`` tiles, forms ``silu(gate) * up`` in
+VMEM, reconstructs the matching ``w_down`` *rows* (``w_down`` is packed
+transposed, so its reduction dim is the windowed one) and accumulates
+straight into the ``(B, d_model)`` output — the ``(B, ff)`` intermediate
+never touches HBM and the per-layer dispatch count drops from three to one.
 """
 
 from __future__ import annotations
@@ -46,7 +54,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["vusa_packed_matmul", "RECONSTRUCT_MODES", "DEFAULT_SLOT_CHUNK"]
+__all__ = [
+    "vusa_packed_matmul",
+    "vusa_fused_mlp_matmul",
+    "RECONSTRUCT_MODES",
+    "DEFAULT_SLOT_CHUNK",
+]
 
 RECONSTRUCT_MODES = ("onehot", "loop")
 DEFAULT_SLOT_CHUNK = 24  # slots per one-hot pass; bounds the scatter scratch
@@ -86,6 +99,12 @@ def _reconstruct_loop(vals, pos, m: int):
     return jax.lax.fori_loop(0, slots, slot, jnp.zeros((k_blk, m), jnp.float32))
 
 
+def _reconstruct(vals, pos, m: int, reconstruct: str, slot_chunk: int):
+    if reconstruct == "onehot":
+        return _reconstruct_onehot(vals, pos, m, slot_chunk)
+    return _reconstruct_loop(vals, pos, m)
+
+
 def _kernel(x_ref, val_ref, pos_ref, y_ref, *, m: int, reconstruct: str, slot_chunk: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -93,10 +112,7 @@ def _kernel(x_ref, val_ref, pos_ref, y_ref, *, m: int, reconstruct: str, slot_ch
 
     vals = val_ref[0].astype(jnp.float32)  # (K_blk, S)
     pos = pos_ref[0].astype(jnp.int32)
-    if reconstruct == "onehot":
-        w = _reconstruct_onehot(vals, pos, m, slot_chunk)
-    else:
-        w = _reconstruct_loop(vals, pos, m)
+    w = _reconstruct(vals, pos, m, reconstruct, slot_chunk)
     y_ref[...] += jnp.dot(
         x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
     ).astype(y_ref.dtype)
@@ -136,3 +152,125 @@ def vusa_packed_matmul(
         out_shape=jax.ShapeDtypeStruct((b, t * m), jnp.float32),
         interpret=interpret,
     )(x, values, positions)
+
+
+# --------------------------------------------------------------------------
+# Fused packed-MLP megakernel (DESIGN.md §7)
+# --------------------------------------------------------------------------
+
+
+def _matmul_packed_window(x, val_ref, pos_ref, m, k_blk, reconstruct, slot_chunk):
+    """``x @ W_window`` for one window's packed block ref, chunked over K rows.
+
+    ``x``: (B, K) fp32; ``val_ref``/``pos_ref``: (1, K, S) block refs.
+    Reconstructs the dense tile ``k_blk`` rows at a time (bounding the
+    one-hot scratch at ``k_blk * slot_chunk * m`` fp32) and accumulates the
+    partial products in fp32.  Returns (B, m) fp32.
+    """
+    k = x.shape[1]
+    acc = jnp.zeros((x.shape[0], m), jnp.float32)
+    for k0 in range(0, k, k_blk):
+        width = min(k_blk, k - k0)
+        vals = val_ref[0, k0 : k0 + width].astype(jnp.float32)
+        pos = pos_ref[0, k0 : k0 + width].astype(jnp.int32)
+        w = _reconstruct(vals, pos, m, reconstruct, slot_chunk)
+        acc += jnp.dot(x[:, k0 : k0 + width], w, preferred_element_type=jnp.float32)
+    return acc
+
+
+def _fused_mlp_kernel(
+    x_ref,
+    gv_ref,
+    gp_ref,
+    uv_ref,
+    up_ref,
+    dv_ref,
+    dp_ref,
+    y_ref,
+    *,
+    m: int,
+    k_blk: int,
+    reconstruct: str,
+    slot_chunk: int,
+):
+    """One ff window of the fused MLP: gate/up reconstruct + matmul,
+    ``silu(gate) * up`` in VMEM, then the window's ``w_down`` rows
+    (transposed pack: ``dv``/``dp`` are (1, D, Sd) over the same window)
+    accumulate into the full (B, D) output block."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (B, K)
+    gate = _matmul_packed_window(x, gv_ref, gp_ref, m, k_blk, reconstruct, slot_chunk)
+    up = _matmul_packed_window(x, uv_ref, up_ref, m, k_blk, reconstruct, slot_chunk)
+    h = jax.nn.silu(gate) * up  # (B, m) — the (B, ff) intermediate, one window of it
+    d_out = y_ref.shape[1]
+    for c0 in range(0, d_out, k_blk):
+        width = min(k_blk, d_out - c0)
+        vals = dv_ref[0, c0 : c0 + width].astype(jnp.float32)
+        pos = dp_ref[0, c0 : c0 + width].astype(jnp.int32)
+        # (width, m) rows of w_down.T — lanes are this window's ff rows
+        wd = _reconstruct(vals, pos, m, reconstruct, slot_chunk)
+        y_ref[:, c0 : c0 + width] += jnp.dot(h, wd.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "k_blk", "m", "reconstruct", "slot_chunk")
+)
+def vusa_fused_mlp_matmul(
+    x: jax.Array,  # (B, K)
+    gate_values: jax.Array,  # (T, K, Sg)   w_gate row-pack
+    gate_positions: jax.Array,  # (T, K, Sg) int8
+    up_values: jax.Array,  # (T, K, Su)     w_up row-pack
+    up_positions: jax.Array,  # (T, K, Su) int8
+    down_values: jax.Array,  # (T, D, Sd)   w_down.T row-pack (ff windowed)
+    down_positions: jax.Array,  # (T, D, Sd) int8
+    *,
+    m: int = 128,
+    k_blk: int = 256,
+    interpret: bool = True,
+    reconstruct: str = "onehot",
+    slot_chunk: int = DEFAULT_SLOT_CHUNK,
+) -> jax.Array:
+    """Whole SwiGLU MLP in one ``pallas_call``: ``silu(x@Wg) * (x@Wu) @ Wd``.
+
+    All three weights are row-packed over the *same* ff windows: ``w_gate``
+    and ``w_up`` as (K=d_model, C=ff) with ff the lane dim, ``w_down``
+    *transposed* as (K=d_model out, C=ff) so its reduction dim is windowed
+    too.  The grid walks the T ff windows; each step finishes one window's
+    ``(B, m)`` slice of the hidden state and scatters its contribution into
+    the full ``(B, D)`` output, which accumulates across the grid in fp32.
+    Zero-padded ff lanes (C % m != 0) are exact no-ops: gate/up reconstruct
+    to zero columns there (``silu(0) * 0 = 0``) and the transposed down pack
+    holds no slots pointing at them.  Returns (B, D) fp32.
+    """
+    b, k = x.shape
+    t, kk, _ = gate_values.shape
+    tu, ku, _ = up_values.shape
+    td, d_out, _ = down_values.shape
+    assert kk == k and ku == k, (kk, ku, k)
+    assert tu == t and td == t, (t, tu, td)
+    assert m <= 128, m
+    assert reconstruct in RECONSTRUCT_MODES, reconstruct
+    k_blk = max(1, min(k_blk, max(k, d_out)))
+    sg, su, sd = gate_values.shape[2], up_values.shape[2], down_values.shape[2]
+    return pl.pallas_call(
+        functools.partial(
+            _fused_mlp_kernel, m=m, k_blk=k_blk, reconstruct=reconstruct, slot_chunk=slot_chunk
+        ),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k, sg), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, sg), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, su), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, su), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d_out, sd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d_out, sd), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, d_out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d_out), jnp.float32),
+        interpret=interpret,
+    )(x, gate_values, gate_positions, up_values, up_positions, down_values, down_positions)

@@ -21,7 +21,11 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--packed", action="store_true")
+    ap.add_argument(
+        "--packed", nargs="?", const="mlp", default=False, choices=("mlp", "all"),
+        help="VUSA-pack the decode step: bare flag or 'mlp' = MLP trio only "
+        "(the pre-§7 behaviour), 'all' = + qkv/o and untied LM head",
+    )
     ap.add_argument("--sparsity", type=float, default=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -40,7 +44,7 @@ def main():
     if sp > 0:
         params = prune_tree(params, sp)
     eng = Engine(cfg, params, ServeConfig(max_len=args.prompt_len + args.max_new + 8,
-                                          packed_mlp=args.packed))
+                                          packed_weights=args.packed))
     prompts = np.ones((args.batch, args.prompt_len), np.int32)
     out = eng.generate(prompts, max_new=args.max_new)
     print(f"prefill {out['prefill_s']*1e3:.1f}ms  decode {out['decode_s']*1e3:.1f}ms  "

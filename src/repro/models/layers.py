@@ -379,12 +379,21 @@ def _direct_attend(
 # --------------------------------------------------------------------------
 
 
-def _project_qkv(p, x, cfg, positions):
+def _project_qkv(p, x, cfg, positions, wmm=None):
+    """QKV projection.  ``wmm`` optionally overrides the weight matmuls:
+    ``wmm(name, x) -> x @ W_name`` on the flattened head dim — the hook the
+    VUSA-packed decode path (serve/packed.py) uses to run the projections
+    through the row-packed kernel without forking the rope/bias/norm glue."""
     b, s, d = x.shape
     nh, kvh, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
-    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"].astype(x.dtype))
+    if wmm is None:
+        q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"].astype(x.dtype))
+    else:
+        q = wmm("wq", x).reshape(b, s, nh, hd).astype(x.dtype)
+        k = wmm("wk", x).reshape(b, s, kvh, hd).astype(x.dtype)
+        v = wmm("wv", x).reshape(b, s, kvh, hd).astype(x.dtype)
     if cfg.qkv_bias:
         q = q + p["bq"].astype(x.dtype)[None, None]
         k = k + p["bk"].astype(x.dtype)[None, None]
@@ -512,13 +521,14 @@ def attention_decode(
     cache: dict,  # {"k": (B, S_max, kvh, hd), "v": ..., "pos": int32 scalar}
     window: int = 0,  # >0: ring cache of this size (local attention)
     chunked: bool = False,  # True = paper-baseline flash scan (see DECODE_CHUNKED)
+    wmm=None,  # optional weight-matmul override (see _project_qkv)
 ) -> tuple[jax.Array, dict]:
     """Single-token decode against a (ring) KV cache."""
     b, _, d = x.shape
     nh, kvh, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
     pos = cache["pos"]  # scalar int32: number of tokens already in cache
     s_max = cache["k"].shape[1]
-    q, k_new, v_new = _project_qkv(p, x, cfg, pos[None])
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos[None], wmm=wmm)
     slot = jnp.where(window > 0, pos % s_max, pos)
     k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
     v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
@@ -540,7 +550,10 @@ def attention_decode(
     else:
         out = _direct_attend(q, k, v, mask, pos[None], k_pos, valid)
     out = out.reshape(b, 1, nh, hd)
-    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+    if wmm is None:
+        y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+    else:
+        y = wmm("wo", out.reshape(b, 1, nh * hd)).astype(x.dtype)
     return y, {"k": k, "v": v, "pos": pos + 1}
 
 

@@ -1,6 +1,8 @@
 """Serving engine: batched prefill + decode with per-family caches, greedy /
-temperature sampling, and optional VUSA-packed MLP execution (the paper's
-technique on the inference path, where weight-byte savings pay off).
+temperature sampling, and optional VUSA-packed decode execution — MLP-only
+or the whole decode step, see ``ServeConfig.packed_weights`` and DESIGN.md
+§7 (the paper's technique on the inference path, where weight-byte savings
+pay off).
 
 The decode loop is *fused on device* (DESIGN.md §4): one jitted
 ``lax.scan`` steps the model ``max_new - 1`` times, deriving per-token
@@ -34,7 +36,12 @@ class ServeConfig:
     max_len: int = 256
     temperature: float = 0.0  # 0 => greedy
     seed: int = 0
-    packed_mlp: bool = False  # run MLP matmuls VUSA-packed (dense family)
+    # VUSA-packed decode (dense family, DESIGN.md §7): False = dense, "mlp"
+    # packs the per-layer MLP trio, "all" (or True) additionally packs
+    # wq/wk/wv/wo and the untied LM head — the whole dense-family decode step
+    packed_weights: bool | str = False
+    packed_mlp: bool = False  # deprecated alias for packed_weights="mlp"
+    fused_mlp: bool = True  # megakernel MLP (False = 3-dispatch measured baseline)
     vusa_m: int = 128  # window lanes (kernel tile)
     vusa_a: int = 16  # physical slots per row per job
     fused: bool = True  # on-device lax.scan decode loop (False = seed host loop)
@@ -42,6 +49,16 @@ class ServeConfig:
     # tuple = powers of two from 8 up to max_len.  One compiled prefill
     # program per (bucket, batch-bucket) serves any prompt length.
     prefill_buckets: tuple = ()
+
+    def __post_init__(self):
+        if self.packed_weights is True:
+            self.packed_weights = "all"
+        if self.packed_mlp and not self.packed_weights:
+            self.packed_weights = "mlp"  # legacy spelling keeps its MLP-only scope
+        if self.packed_weights not in (False, "mlp", "all"):
+            raise ValueError(
+                f"packed_weights must be False, 'mlp' or 'all', got {self.packed_weights!r}"
+            )
 
 
 class Engine:
@@ -51,10 +68,13 @@ class Engine:
         self.model = build_model(cfg)
         self.params = params
         self._packed = None
-        if sc.packed_mlp:
-            from .packed import pack_lm_mlps  # local import: needs kernels
+        if sc.packed_weights:
+            from .packed import pack_lm_weights  # local import: needs kernels
 
-            self._packed = pack_lm_mlps(cfg, params, sc.vusa_m, sc.vusa_a)
+            self._packed = pack_lm_weights(
+                cfg, params, sc.vusa_m, sc.vusa_a,
+                scope=sc.packed_weights, fused_mlp=sc.fused_mlp,
+            )
         self._decode = jax.jit(self._decode_fn)
         self._decode_loop = jax.jit(self._decode_loop_fn, static_argnums=(4,))
         self._prime_loop = jax.jit(self._prime_loop_fn)

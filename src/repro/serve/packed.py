@@ -1,105 +1,275 @@
-"""VUSA-packed decode path for the dense LM family.
+"""VUSA-packed decode path for the dense LM family (DESIGN.md §7).
 
-``pack_lm_mlps`` packs every layer's MLP matrices (the dominant weight bytes)
-into the row-wise VUSA format; ``lm_decode_step_packed`` is a twin of
-``families.lm_decode_step`` whose MLP matmuls run through the Pallas kernel.
-Layer packs are stacked on a leading axis so the layer loop stays a scan.
+``pack_lm_weights`` packs the decode-step weights into the row-wise VUSA
+format: per-layer MLP matrices (``w_gate``/``w_up`` plain, ``w_down``
+*transposed* so the fused megakernel can window its reduction dim), and —
+with ``scope="all"`` — the attention projections ``wq/wk/wv/wo`` and the
+untied LM head.  One static sparse format serves every GEMM of the decode
+step, the paper's application-independence claim on the serving path.
+
+``lm_decode_step_packed`` is a twin of ``families.lm_decode_step`` whose
+packed matmuls run through the Pallas kernels: the MLP through the fused
+megakernel (``kernels.ops.apply_fused_mlp`` — one dispatch per layer, the
+``(B, ff)`` intermediate never leaves VMEM) or, with ``fused_mlp=False``,
+through the measured 3-dispatch baseline; attention projections and the
+vocab-wide head reuse the multi-window row-packed kernel.  Layer packs are
+stacked on a leading axis so the layer loop stays a scan.
+
+``pack_lm_mlps`` survives as the legacy MLP-only packer (flat dict, dense
+``w_down``); ``lm_decode_step_packed`` accepts both layouts.
 """
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..kernels.ops import RowPackedLinear, apply_row_packed, pack_linear_rows
+from ..kernels.ops import (
+    RowPackedLinear,
+    apply_fused_mlp,
+    apply_row_packed,
+    pack_linear_rows,
+    pack_linear_rows_t,
+)
 from ..models import families as F
 from ..models.common import rms_norm
 
-__all__ = ["pack_lm_mlps", "lm_decode_step_packed"]
+__all__ = [
+    "pack_lm_mlps",
+    "pack_lm_weights",
+    "lm_decode_step_packed",
+    "packed_byte_ratios",
+]
+
+ATTN_NAMES = ("wq", "wk", "wv", "wo")
 
 
-def pack_lm_mlps(cfg: ArchConfig, params, m: int = 128, a: int = 16) -> Dict:
-    """Pack per-layer MLP weights; returns stacked (L, ...) device arrays.
+# --------------------------------------------------------------------------
+# packers
+# --------------------------------------------------------------------------
+
+
+def _stack_packs(packs) -> Dict:
+    """Stack per-layer RowPackedLinear into one (L, ...) device dict.
 
     Jobs are padded to the max across layers so the stack is rectangular
     (padded jobs are exact no-ops: value 0, position -1)."""
+    smax = max(p.values.shape[2] for p in packs)
+
+    def pad(p: RowPackedLinear):
+        _, _, s = p.values.shape
+        v = jnp.pad(p.values, ((0, 0), (0, 0), (0, smax - s)))
+        q = jnp.pad(p.positions, ((0, 0), (0, 0), (0, smax - s)), constant_values=-1)
+        return v, q
+
+    vs, qs = zip(*(pad(p) for p in packs))
+    return {
+        "values": jnp.stack(vs),
+        "positions": jnp.stack(qs),
+        "k": packs[0].k,
+        "c": packs[0].c,
+        "m": packs[0].m,
+        "a": packs[0].a,
+    }
+
+
+def _stack_layers(ws: np.ndarray, m: int, a: int, pack_fn=pack_linear_rows) -> Dict:
+    """Pack every layer of a stacked (L, K, C) weight and stack the packs."""
+    return _stack_packs([pack_fn(ws[layer], m=m, a=a) for layer in range(ws.shape[0])])
+
+
+def _pack_one(p: RowPackedLinear) -> Dict:
+    return {
+        "values": p.values,
+        "positions": p.positions,
+        "k": p.k,
+        "c": p.c,
+        "m": p.m,
+        "a": p.a,
+    }
+
+
+def _as_linear(entry: Dict, values, positions) -> RowPackedLinear:
+    """Rebuild a RowPackedLinear from scanned per-layer leaves + static meta."""
+    return RowPackedLinear(
+        values=values, positions=positions,
+        k=entry["k"], c=entry["c"], a=entry["a"], m=entry["m"],
+    )
+
+
+def pack_lm_mlps(cfg: ArchConfig, params, m: int = 128, a: int = 16) -> Dict:
+    """Legacy MLP-only pack (flat dict, dense-orientation ``w_down``): the
+    operands of the 3-dispatch baseline path."""
     layers = params["layers"]["ffn"]
-    n_layers = cfg.n_layers
-    packed = {"w_gate": [], "w_up": [], "w_down": []}
-    for name in packed:
-        for l in range(n_layers):
-            w = np.asarray(layers[name][l])
-            packed[name].append(pack_linear_rows(w, m=m, a=a))
-    out = {}
-    for name, packs in packed.items():
-        smax = max(p.values.shape[2] for p in packs)
+    return {
+        name: _stack_layers(np.asarray(layers[name]), m, a)
+        for name in ("w_gate", "w_up", "w_down")
+    }
 
-        def pad(p: RowPackedLinear):
-            t, k, s = p.values.shape
-            v = jnp.pad(p.values, ((0, 0), (0, 0), (0, smax - s)))
-            q = jnp.pad(p.positions, ((0, 0), (0, 0), (0, smax - s)), constant_values=-1)
-            return v, q
 
-        vs, qs = zip(*(pad(p) for p in packs))
-        out[name] = {
-            "values": jnp.stack(vs),
-            "positions": jnp.stack(qs),
-            "k": packs[0].k,
-            "c": packs[0].c,
-            "m": packs[0].m,
-            "a": a,
-        }
+def pack_lm_weights(
+    cfg: ArchConfig,
+    params,
+    m: int = 128,
+    a: int = 16,
+    scope: str = "all",
+    fused_mlp: bool = True,
+) -> Dict:
+    """Pack the dense-family decode-step weights; returns a structured dict.
+
+    ``scope="mlp"`` packs only the per-layer MLP trio; ``scope="all"`` adds
+    the attention projections (head dims flattened to 2-D) and the untied
+    LM head (tied embeddings stay a gather + transpose-einsum — there is no
+    separate weight to pack).  ``fused_mlp`` selects the megakernel operand
+    layout (``w_down`` packed transposed via ``pack_linear_rows_t``) vs the
+    3-dispatch baseline layout (``w_down`` packed plain)."""
+    assert cfg.family == "dense", "packed decode path targets the dense family"
+    assert scope in ("mlp", "all"), scope
+    ffn = params["layers"]["ffn"]
+    mlp: Dict = {
+        name: _stack_layers(np.asarray(ffn[name]), m, a) for name in ("w_gate", "w_up")
+    }
+    if fused_mlp:
+        mlp["w_down_t"] = _stack_layers(np.asarray(ffn["w_down"]), m, a, pack_linear_rows_t)
+    else:
+        mlp["w_down"] = _stack_layers(np.asarray(ffn["w_down"]), m, a)
+    out: Dict = {
+        "mlp": mlp,
+        "attn": None,
+        "head": None,
+        "scope": scope,
+        "fused_mlp": fused_mlp,
+    }
+    if scope == "all":
+        attn_p = params["layers"]["attn"]
+        attn: Dict = {}
+        for name in ATTN_NAMES:
+            w = np.asarray(attn_p[name])  # (L, d, nh, hd) or (L, nh, hd, d)
+            flat = (
+                w.reshape(w.shape[0], -1, w.shape[-1])  # wo: (L, nh*hd, d)
+                if name == "wo"
+                else w.reshape(w.shape[0], w.shape[1], -1)  # q/k/v: (L, d, nh*hd)
+            )
+            attn[name] = _stack_layers(flat, m, a)
+        out["attn"] = attn
+        if not cfg.tie_embeddings:
+            out["head"] = _pack_one(pack_linear_rows(np.asarray(params["lm_head"]), m=m, a=a))
     return out
 
 
+def packed_byte_ratios(packed: Dict, value_bytes: Optional[int] = None) -> Dict[str, float]:
+    """Per-weight and total packed/dense HBM byte ratios (int8 positions).
+
+    Accepts both the structured ``pack_lm_weights`` dict and the legacy flat
+    ``pack_lm_mlps`` dict.  ``value_bytes`` defaults to the packed value
+    itemsize."""
+    flat: Dict[str, Dict] = {}
+    if "mlp" in packed:
+        flat.update(packed["mlp"])
+        if packed.get("attn"):
+            flat.update(packed["attn"])
+        if packed.get("head") is not None:
+            flat["lm_head"] = packed["head"]
+    else:
+        flat.update(packed)
+    ratios: Dict[str, float] = {}
+    tot_packed = tot_dense = 0
+    for name, e in flat.items():
+        v = e["values"]
+        vb = v.dtype.itemsize if value_bytes is None else value_bytes
+        n_layers = v.shape[0] if v.ndim == 4 else 1
+        pb = v.size * (vb + 1)  # values + int8 positions
+        db = n_layers * e["k"] * e["c"] * vb
+        ratios[name] = pb / db
+        tot_packed += pb
+        tot_dense += db
+    ratios["total"] = tot_packed / max(tot_dense, 1)
+    return ratios
+
+
+# --------------------------------------------------------------------------
+# decode step
+# --------------------------------------------------------------------------
+
+
 def lm_decode_step_packed(params, packed, token, cache, cfg):
-    """One-token decode with VUSA-packed MLPs (dense family only)."""
+    """One-token decode with VUSA-packed weights (dense family only).
+
+    ``packed`` is a ``pack_lm_weights`` dict (fused megakernel MLP and,
+    with ``scope="all"``, packed attention projections + LM head) or a
+    legacy ``pack_lm_mlps`` flat dict (MLP-only, 3-dispatch baseline)."""
     assert cfg.family == "dense", "packed decode path targets the dense family"
+    if "mlp" not in packed:  # legacy flat layout
+        packed = {"mlp": packed, "attn": None, "head": None, "fused_mlp": False}
+    mlp = packed["mlp"]
+    attn = packed["attn"]
+    fused = packed.get("fused_mlp", "w_down_t" in mlp)
+
     x = F._embed_tokens(params, token, cfg)
     pos = cache["pos"]
 
     from ..models.layers import attention_decode  # noqa: PLC0415
 
-    meta = {
-        n: (packed[n]["k"], packed[n]["c"], packed[n]["m"], packed[n]["a"])
-        for n in ("w_gate", "w_up", "w_down")
-    }
+    def papply(entry, vals, poss, x2):
+        return apply_row_packed(x2, _as_linear(entry, vals, poss))
 
-    def papply(name, vals, poss, x2):
-        k, c, m, a = meta[name]
-        p = RowPackedLinear(values=vals, positions=poss, k=k, c=c, a=a, m=m)
-        return apply_row_packed(x2, p)
+    def arrays(group):  # scanned leaves only; meta stays static
+        return {n: {"values": e["values"], "positions": e["positions"]} for n, e in group.items()}
+
+    xs = (
+        params["layers"],
+        {"k": cache["k"], "v": cache["v"]},
+        arrays(mlp),
+        arrays(attn) if attn is not None else {},
+    )
 
     def body(x, layer_in):
-        lp, cache_l, gv, gp, uv, up_, dv, dp = layer_in
+        lp, cache_l, mlp_l, attn_l = layer_in
         h = rms_norm(x, lp["norm1"])
-        y, new_cache = attention_decode(lp["attn"], h, cfg, {**cache_l, "pos": pos})
+        wmm = (
+            (
+                lambda name, x2: papply(
+                    attn[name], attn_l[name]["values"], attn_l[name]["positions"], x2
+                )
+            )
+            if attn is not None
+            else None
+        )
+        y, new_cache = attention_decode(
+            lp["attn"], h, cfg, {**cache_l, "pos": pos}, wmm=wmm
+        )
         x = x + y
         h = rms_norm(x, lp["norm2"])
         b, s, d = h.shape
         hf = h.reshape(b * s, d)
-        gate = jax.nn.silu(papply("w_gate", gv, gp, hf))
-        up = papply("w_up", uv, up_, hf)
-        y2 = papply("w_down", dv, dp, (gate * up).astype(hf.dtype))
+        if fused:
+
+            def lin(name):
+                return _as_linear(mlp[name], mlp_l[name]["values"], mlp_l[name]["positions"])
+
+            y2 = apply_fused_mlp(hf, lin("w_gate"), lin("w_up"), lin("w_down_t"))
+        else:  # 3-dispatch baseline: gate/up/down round-trip the (B, ff)
+
+            def pap(name, x2):
+                return papply(mlp[name], mlp_l[name]["values"], mlp_l[name]["positions"], x2)
+
+            gate = jax.nn.silu(pap("w_gate", hf))
+            up = pap("w_up", hf)
+            y2 = pap("w_down", (gate * up).astype(hf.dtype))
         x = x + y2.reshape(b, s, d).astype(x.dtype)
         return x, {"k": new_cache["k"], "v": new_cache["v"]}
 
-    x, new_kv = jax.lax.scan(
-        body,
-        x,
-        (
-            params["layers"],
-            {"k": cache["k"], "v": cache["v"]},
-            packed["w_gate"]["values"], packed["w_gate"]["positions"],
-            packed["w_up"]["values"], packed["w_up"]["positions"],
-            packed["w_down"]["values"], packed["w_down"]["positions"],
-        ),
-    )
+    x, new_kv = jax.lax.scan(body, x, xs)
     x = rms_norm(x, params["final_norm"])
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if packed.get("head") is not None:
+        b, s, d = x.shape
+        head_p = _as_linear(packed["head"], packed["head"]["values"], packed["head"]["positions"])
+        logits = apply_row_packed(x.reshape(b * s, d), head_p).reshape(b, s, -1)
+    else:
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
     return logits, {**new_kv, "pos": pos + 1}

@@ -135,6 +135,6 @@ def test_engine_respects_vusa_a():
     prompts = np.ones((2, 6), np.int32)
     dense = Engine(cfg, params, ServeConfig(max_len=64)).generate(prompts, max_new=6)
     eng = Engine(cfg, params, ServeConfig(max_len=64, packed_mlp=True, vusa_a=8))
-    assert eng._packed["w_gate"]["a"] == 8
+    assert eng._packed["mlp"]["w_gate"]["a"] == 8
     packed = eng.generate(prompts, max_new=6)
     np.testing.assert_array_equal(dense["tokens"], packed["tokens"])
