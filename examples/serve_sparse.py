@@ -23,7 +23,20 @@ def main():
     ap.add_argument("--sparsity", type=float, default=0.85)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--new", type=int, default=16)
+    ap.add_argument(
+        "--mesh", default=None, metavar="DP,TP",
+        help="serve sharded on a data x model mesh (DESIGN.md §8), e.g. "
+        "'1,2'; outputs stay identical to the single-device path.  On CPU "
+        "set XLA_FLAGS=--xla_force_host_platform_device_count=N first",
+    )
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+
+        mesh = make_serve_mesh(args.mesh)
+        print(f"serving on mesh {dict(mesh.shape)}")
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
@@ -34,7 +47,7 @@ def main():
 
     tokens = {}
     for packed in (False, "all"):
-        eng = Engine(cfg, params, ServeConfig(max_len=128, packed_weights=packed))
+        eng = Engine(cfg, params, ServeConfig(max_len=128, packed_weights=packed), mesh=mesh)
         out = eng.generate(prompts, max_new=args.new)
         tokens[packed] = out["tokens"]
         label = "VUSA-packed" if packed else "dense      "
@@ -56,7 +69,7 @@ def main():
     # backfilled as requests retire
     from repro.serve import Request, Scheduler
 
-    eng = Engine(cfg, params, ServeConfig(max_len=128, packed_weights="all"))
+    eng = Engine(cfg, params, ServeConfig(max_len=128, packed_weights="all"), mesh=mesh)
     sched = Scheduler(eng, slots=args.batch, segment=8)
     rng = np.random.default_rng(0)
     budget_cap = 128 - 8 - 8  # max_len - longest prompt - segment

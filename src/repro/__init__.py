@@ -1,0 +1,19 @@
+"""VUSA reproduction package.
+
+One process-global knob lives here: partitionable threefry.  The serving
+stack samples tokens *inside* sharded programs (DESIGN.md §8), and under the
+legacy threefry lowering the random bits an op produces depend on the
+sharding GSPMD picks for it — the same ``jax.random.categorical(sub, logits)``
+emits different tokens in a mesh-partitioned decode loop than in the
+single-device one, for the same key.  ``jax_threefry_partitionable`` is the
+upstream fix (and the default in newer jax): bits become a pure function of
+key and position, invariant to sharding, so sharded and single-device decode
+are bit-identical stream-for-stream.  It must be set process-wide before any
+key is used — flipping it per-engine would make token streams depend on
+construction order — which is why it lives in the package root and not in
+``serve.Engine``.
+"""
+
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)

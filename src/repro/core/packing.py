@@ -25,7 +25,7 @@ from .vusa import Job, mac_assignment, schedule_matrix
 __all__ = [
     "ExactPacked", "pack_exact", "unpack_exact",
     "BlockPacked", "pack_blocks", "unpack_blocks",
-    "RowPacked", "pack_rows", "pack_rows_t", "unpack_rows",
+    "RowPacked", "pack_rows", "pack_rows_t", "unpack_rows", "shard_windows",
 ]
 
 
@@ -251,6 +251,34 @@ def pack_rows_t(w: np.ndarray, m: int = 128, a: int = 16) -> RowPacked:
     ``(d, m)`` tile whose lanes are ``w_down`` rows ``[t*m, (t+1)*m)``.
     ``unpack_rows`` of the result therefore returns ``w.T``."""
     return pack_rows(np.ascontiguousarray(np.asarray(w).T), m=m, a=a)
+
+
+def shard_windows(p: RowPacked, n_shards: int) -> RowPacked:
+    """Pad the window axis so ``n_shards`` devices can each hold a contiguous
+    block of windows (the mesh ``model``-axis view used by sharded serving,
+    DESIGN.md §8).
+
+    Padded windows are exact no-op jobs — value 0, position -1 — so
+    ``unpack_rows`` of the result is unchanged: window ``t`` still covers
+    columns ``[t*m, (t+1)*m)`` and the pad windows reconstruct all-zero tiles
+    past the real column range.  Shard ``s`` of the result owns windows
+    ``[s*T/n, (s+1)*T/n)``, a contiguous column slice of the output, so the
+    shards' partial outputs reassemble by concatenation (or, zero-extended,
+    by sum).  ``n_shards`` that already divides the window count returns the
+    pack unchanged."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    t = p.values.shape[0]
+    pad = (-t) % n_shards
+    if pad == 0:
+        return p
+    values = np.concatenate(
+        [p.values, np.zeros((pad,) + p.values.shape[1:], p.values.dtype)]
+    )
+    positions = np.concatenate(
+        [p.row_positions, np.full((pad,) + p.row_positions.shape[1:], -1, np.int8)]
+    )
+    return RowPacked(k=p.k, c=p.c, m=p.m, a=p.a, values=values, row_positions=positions)
 
 
 def unpack_rows(p: RowPacked) -> np.ndarray:

@@ -36,6 +36,7 @@ __all__ = [
     "batch_sharding",
     "batch_shardings",
     "serve_shardings",
+    "window_sharding",
 ]
 
 
@@ -131,22 +132,57 @@ def batch_shardings(mesh, batch: Dict[str, object]) -> Dict[str, NamedSharding]:
     }
 
 
-def serve_shardings(cache_tree, mesh, batch_size: int):
+def serve_shardings(cache_tree, mesh, batch_size: int, batch_axes=None):
     """Shardings for a decode-cache pytree: shard the batch dim over DP.
 
-    Cache leaves are layer-stacked — the batch dim is whichever of the first
-    two dims equals ``batch_size`` (scalars like ``pos`` stay replicated).
+    ``batch_axes`` (a tree of per-leaf batch-axis ints, -1 for per-sequence
+    scalars — see :func:`repro.models.cache.batch_axes`) pins each leaf's
+    batch dim structurally.  Without it the batch dim is guessed as whichever
+    of the first two dims equals ``batch_size`` — ambiguous when another
+    leading dim (e.g. the layer stack) happens to equal the batch size, so
+    callers that know their cache family should pass the axes tree.  Scalars
+    like ``pos`` stay replicated either way.
     """
     axes = _batch_axes(mesh)
     first = (axes if len(axes) > 1 else axes[0]) if axes else None
+    shardable = first is not None and _divisible(batch_size, mesh, axes)
 
-    def one(s):
+    def guess(s):
         parts = [None] * len(s.shape)
-        if first is not None and _divisible(batch_size, mesh, axes):
+        if shardable:
             for i, d in enumerate(s.shape[:2]):
                 if d == batch_size:
                     parts[i] = first
                     break
         return NamedSharding(mesh, PartitionSpec(*parts))
 
-    return jax.tree_util.tree_map(one, cache_tree)
+    if batch_axes is None:
+        return jax.tree_util.tree_map(guess, cache_tree)
+
+    def structural(s, ax):
+        parts = [None] * len(s.shape)
+        if shardable and ax >= 0:
+            parts[ax] = first
+        return NamedSharding(mesh, PartitionSpec(*parts))
+
+    return jax.tree_util.tree_map(structural, cache_tree, batch_axes)
+
+
+def window_sharding(mesh, n_windows: int, ndim: int, axis: int = 0) -> NamedSharding:
+    """Sharding for a packed-weight array along its window axis (DESIGN.md §8).
+
+    The row-wise VUSA pack stacks windows on one axis (``values``/``positions``
+    are ``(T, K, S)``, layer-stacked packs ``(L, T, K, S)``); TP splits that
+    axis over the ``model`` mesh axis so each device reconstructs only its
+    windows.  Same fallback contract as every other rule here: a missing or
+    size-1 ``model`` axis, or a window count it does not divide (packs are
+    normally padded to divide at pack time — see
+    ``core.packing.shard_windows`` — but hand-built packs may not be),
+    replicates instead of erroring.  The int8 ``positions`` metadata arrays
+    take the identical spec: metadata must never be sharded differently from
+    the values it indexes.
+    """
+    parts = [None] * ndim
+    if "model" in mesh.shape and _divisible(n_windows, mesh, ("model",)):
+        parts[axis] = "model"
+    return NamedSharding(mesh, PartitionSpec(*parts))

@@ -35,6 +35,10 @@ __all__ = [
     "apply_fused_mlp",
     "apply_fused_mlp_ref",
     "autotune_fused_mlp",
+    "shard_linear_windows",
+    "mesh_axis_size",
+    "apply_row_packed_sharded",
+    "apply_fused_mlp_sharded",
 ]
 
 
@@ -459,4 +463,136 @@ def apply_fused_mlp_ref(
         xf, gate.values, gate.positions, up.values, up.positions,
         down_t.values, down_t.positions, m=gate.m,
     )
+    return y.reshape(*lead, down_t.k).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mesh-sharded appliers (DESIGN.md §8): the pack's window axis is split over
+# the `model` mesh axis and each device runs the *single-device* kernel on
+# its window shard — the virtually upscaled array spans devices, not just
+# one chip's lanes.  mesh=None (or a size-1 model axis) is the degenerate
+# case and routes straight to the plain appliers, byte-identical program.
+# --------------------------------------------------------------------------
+
+from jax.experimental.shard_map import shard_map  # noqa: E402
+from jax.sharding import PartitionSpec as _P  # noqa: E402
+
+
+def mesh_axis_size(mesh, axis_name: str = "model") -> int:
+    """Size of a mesh axis; 1 for no mesh / absent axis (degenerate case)."""
+    if mesh is None or axis_name not in mesh.shape:
+        return 1
+    return int(mesh.shape[axis_name])
+
+
+def shard_linear_windows(p: RowPackedLinear, n_shards: int) -> RowPackedLinear:
+    """Pad the window axis to a multiple of ``n_shards`` with no-op windows
+    (value 0, position -1) — the device-array twin of
+    ``core.packing.shard_windows``.  ``k``/``c`` metadata is unchanged: pad
+    windows reconstruct zero tiles past the real column range."""
+    t = p.values.shape[0]
+    pad = (-t) % n_shards
+    if pad == 0:
+        return p
+    values = jnp.pad(p.values, ((0, pad), (0, 0), (0, 0)))
+    positions = jnp.pad(p.positions, ((0, pad), (0, 0), (0, 0)), constant_values=-1)
+    return RowPackedLinear(values=values, positions=positions, k=p.k, c=p.c, a=p.a, m=p.m)
+
+
+def _local_view(p: RowPackedLinear, values, positions, t_local: int) -> RowPackedLinear:
+    """Per-shard view: same geometry, ``c`` covering only the local windows."""
+    return RowPackedLinear(
+        values=values, positions=positions, k=p.k, c=t_local * p.m, a=p.a, m=p.m
+    )
+
+
+def apply_row_packed_sharded(
+    x: jax.Array,
+    p: RowPackedLinear,
+    mesh=None,
+    axis_name: str = "model",
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``apply_row_packed`` with the window axis sharded over ``axis_name``.
+
+    Windows tile the *output* columns, so each shard's kernel emits a
+    contiguous ``(B, T_loc*m)`` column slice; a tiled all-gather over the
+    mesh axis reassembles the full width on every device (column-parallel
+    output, the tensor-parallel twin of the fused kernel's psum).  Values
+    and positions enter the shard_map split on their leading window axis —
+    pre-placing them with ``dist.sharding.window_sharding`` makes that split
+    free.  Degenerate mesh (None or size-1 axis) runs the plain kernel."""
+    tp = mesh_axis_size(mesh, axis_name)
+    if tp == 1:
+        return apply_row_packed(x, p, interpret=interpret)
+    p = shard_linear_windows(p, tp)
+    t = p.values.shape[0]
+    t_local = t // tp
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+
+    def local(xf, values, positions):
+        y = apply_row_packed(
+            xf, _local_view(p, values, positions, t_local), interpret=interpret
+        )
+        return jax.lax.all_gather(y, axis_name, axis=1, tiled=True)
+
+    y = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(_P(), _P(axis_name), _P(axis_name)),
+        out_specs=_P(),
+        check_rep=False,
+    )(xf, p.values, p.positions)
+    return y[..., : p.c].reshape(*lead, p.c).astype(x.dtype)
+
+
+def apply_fused_mlp_sharded(
+    x: jax.Array,
+    gate: RowPackedLinear,
+    up: RowPackedLinear,
+    down_t: RowPackedLinear,
+    mesh=None,
+    axis_name: str = "model",
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``apply_fused_mlp`` with the ff-window axis sharded over ``axis_name``.
+
+    All three packs window the same ff dim, so one shard owns a slab of ff:
+    it reconstructs its ``w_gate``/``w_up`` windows, forms that slab of
+    ``silu(gate) * up`` in VMEM, and folds it through its ``w_down`` rows
+    into a *partial* ``(B, d_model)`` output; a psum over the mesh axis sums
+    the shards — ff is ``w_down``'s reduction dim, so partial outputs add.
+    Degenerate mesh runs the plain megakernel."""
+    tp = mesh_axis_size(mesh, axis_name)
+    if tp == 1:
+        return apply_fused_mlp(x, gate, up, down_t, interpret=interpret)
+    _check_fused_packs(x.shape[-1], gate, up, down_t)
+    gate = shard_linear_windows(gate, tp)
+    up = shard_linear_windows(up, tp)
+    down_t = shard_linear_windows(down_t, tp)
+    t_local = gate.values.shape[0] // tp
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+
+    def local(xf, gv, gp, uv, upp, dv, dp):
+        y = apply_fused_mlp(
+            xf,
+            _local_view(gate, gv, gp, t_local),
+            _local_view(up, uv, upp, t_local),
+            _local_view(down_t, dv, dp, t_local),
+            interpret=interpret,
+        )
+        return jax.lax.psum(y.astype(jnp.float32), axis_name)
+
+    y = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(_P(),) + (_P(axis_name),) * 6,
+        out_specs=_P(),
+        check_rep=False,
+    )(xf, gate.values, gate.positions, up.values, up.positions,
+      down_t.values, down_t.positions)
     return y.reshape(*lead, down_t.k).astype(x.dtype)

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_serve_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,3 +23,27 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Mesh over whatever devices exist locally (tests / examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(spec: str):
+    """Build a serving mesh from a ``"dp,tp"`` CLI spec (e.g. ``"2,4"`` =
+    data-parallel 2 x tensor-parallel 4 — the layout
+    ``launch/serve.py --mesh`` and the sharded-serve tests use).  ``"1,1"``
+    is the degenerate single-device mesh; the serve stack treats it exactly
+    like no mesh at all (DESIGN.md §8).  Raises with an actionable message
+    when the spec asks for more devices than exist (on CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    try:
+        data, model = (int(p) for p in spec.split(","))
+    except ValueError as e:
+        raise ValueError(f"--mesh expects 'dp,tp' (e.g. '2,4'), got {spec!r}") from e
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data}, model={model}")
+    have = len(jax.devices())
+    if data * model > have:
+        raise ValueError(
+            f"mesh {data}x{model} needs {data * model} devices but only {have} "
+            f"exist; on CPU, force virtual devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data * model}"
+        )
+    return make_local_mesh(data, model)

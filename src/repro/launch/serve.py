@@ -30,6 +30,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument(
+        "--mesh", default=None, metavar="DP,TP",
+        help="serve on a data x model device mesh (e.g. '2,4'): params/KV "
+        "shard over 'data', packed-weight windows over 'model'; '1,1' (or "
+        "omitting the flag) is the single-device path",
+    )
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -43,8 +49,14 @@ def main():
     sp = cfg.sparsity if args.sparsity is None else args.sparsity
     if sp > 0:
         params = prune_tree(params, sp)
+    mesh = None
+    if args.mesh:
+        from .mesh import make_serve_mesh
+
+        mesh = make_serve_mesh(args.mesh)
+        print(f"mesh {dict(mesh.shape)} over {len(mesh.devices.flat)} devices")
     eng = Engine(cfg, params, ServeConfig(max_len=args.prompt_len + args.max_new + 8,
-                                          packed_weights=args.packed))
+                                          packed_weights=args.packed), mesh=mesh)
     prompts = np.ones((args.batch, args.prompt_len), np.int32)
     out = eng.generate(prompts, max_new=args.max_new)
     print(f"prefill {out['prefill_s']*1e3:.1f}ms  decode {out['decode_s']*1e3:.1f}ms  "

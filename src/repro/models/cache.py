@@ -26,6 +26,7 @@ __all__ = [
     "batch_axes",
     "reset_slot",
     "slot_count",
+    "slot_shardings",
 ]
 
 
@@ -96,6 +97,21 @@ def write_slots(slot_cache, idx, batched_cache, axes, pos):
         return leaf.at[idx].set(rows.astype(leaf.dtype), mode="drop")
 
     return jax.tree_util.tree_map(one, slot_cache, batched_cache, axes)
+
+
+def slot_shardings(slot_cache, mesh):
+    """NamedSharding tree for a slot-stacked cache: the leading ``slots``
+    axis — every leaf's, including the per-slot scalar ``pos`` — is sharded
+    over the data-parallel mesh axes, everything else replicated (DESIGN.md
+    §8).  Slots are the serve path's batch dim, so this is what scales the
+    KV pool's bytes out with DP.  Falls back to replication when the slot
+    count does not divide the DP degree — sharding degrades, never errors."""
+    from ..dist.sharding import batch_sharding
+
+    n = slot_count(slot_cache)
+    return jax.tree_util.tree_map(
+        lambda leaf: batch_sharding(mesh, n, leaf.ndim), slot_cache
+    )
 
 
 def reset_slot(slot_cache, i: int):

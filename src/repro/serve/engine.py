@@ -17,6 +17,7 @@ identical tokens.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, Optional
@@ -62,19 +63,39 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, cfg: ArchConfig, params, sc: Optional[ServeConfig] = None):
+    def __init__(self, cfg: ArchConfig, params, sc: Optional[ServeConfig] = None, mesh=None):
+        """``mesh`` makes the whole decode/serve path mesh-aware (DESIGN.md
+        §8): parameters are placed under ``dist.sharding.params_shardings``
+        (TP on ``model``, FSDP on ``data``), decode caches shard their batch
+        dim over ``data``, and VUSA packs shard their window axis over
+        ``model`` with the kernels running per-shard under ``shard_map``.  A
+        1x1 mesh (or ``mesh=None``) is the degenerate single-device path —
+        same program, bit-identical tokens."""
         sc = ServeConfig() if sc is None else sc
         self.cfg, self.sc = cfg, sc
         self.model = build_model(cfg)
-        self.params = params
+        self.mesh = mesh
         self._packed = None
         if sc.packed_weights:
-            from .packed import pack_lm_weights  # local import: needs kernels
+            from ..kernels.ops import mesh_axis_size  # local import: needs kernels
+            from .packed import pack_lm_weights, shard_packed
 
+            # pack from the host params before any device placement, then
+            # split the window axes over the model mesh axis
             self._packed = pack_lm_weights(
                 cfg, params, sc.vusa_m, sc.vusa_a,
                 scope=sc.packed_weights, fused_mlp=sc.fused_mlp,
+                shards=mesh_axis_size(mesh, "model"),
             )
+            if mesh is not None:
+                self._packed = shard_packed(self._packed, mesh)
+        if mesh is not None:
+            from ..dist.sharding import act_rules, params_shardings
+
+            self._act_rules = act_rules(mesh)
+            self._cache_axes = self.model.cache_batch_axes(sc.max_len)
+            params = jax.device_put(params, params_shardings(self.model.specs(), mesh))
+        self.params = params
         self._decode = jax.jit(self._decode_fn)
         self._decode_loop = jax.jit(self._decode_loop_fn, static_argnums=(4,))
         self._prime_loop = jax.jit(self._prime_loop_fn)
@@ -94,17 +115,65 @@ class Engine:
         self._prefill_masked = jax.jit(self._prefill_masked_fn) if batchable else None
         self._buckets = self._make_buckets(sc)
 
+    # -- mesh helpers ---------------------------------------------------------
+    def _mesh_ctx(self):
+        """Activation-sharding context for the jitted bodies: installs the
+        mesh + act_rules so ``models.common.shard`` constraints bind during
+        tracing; a no-op context without a mesh."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from ..models.common import mesh_context
+
+        return mesh_context(self.mesh, self._act_rules)
+
+    def shard_cache(self, cache, batch: int):
+        """Place a decode cache on the mesh: batch dim over the DP axes
+        (structurally located per leaf via ``cache_batch_axes``), everything
+        else replicated.  No-op without a mesh."""
+        if self.mesh is None:
+            return cache
+        from ..dist.sharding import serve_shardings
+
+        return jax.device_put(
+            cache, serve_shardings(cache, self.mesh, batch, batch_axes=self._cache_axes)
+        )
+
+    def _shard_batch(self, arr):
+        """Shard an input's leading batch dim over the DP axes (no-op without
+        a mesh; replicates when the batch does not divide)."""
+        if self.mesh is None:
+            return arr
+        from ..dist.sharding import batch_sharding
+
+        return jax.device_put(
+            arr, batch_sharding(self.mesh, arr.shape[0], arr.ndim)
+        )
+
     # -- jitted bodies --------------------------------------------------------
     def _decode_fn(self, params, token, cache, key):
-        if self._packed is not None:
-            from .packed import lm_decode_step_packed
+        with self._mesh_ctx():
+            if self._packed is not None:
+                from .packed import lm_decode_step_packed
 
-            logits, cache = lm_decode_step_packed(
-                params, self._packed, token, cache, self.cfg
-            )
-        else:
-            logits, cache = self.model.decode_step(params, token, cache)
+                logits, cache = lm_decode_step_packed(
+                    params, self._packed, token, cache, self.cfg, mesh=self.mesh
+                )
+            else:
+                logits, cache = self.model.decode_step(params, token, cache)
         logits = logits[:, -1].astype(jnp.float32)
+        if self.mesh is not None:
+            # Pin the sampling computation replicated.  Under the default
+            # (non-partitionable) threefry lowering, random bits generated
+            # for a *sharded* (B, V) block differ from the single-device
+            # stream — GSPMD offsets each shard's counter — so a sharded
+            # categorical would emit different tokens than mesh=None for the
+            # same seed.  Replicating the tiny logits block first keeps the
+            # whole draw bit-identical at every mesh shape (DESIGN.md §8).
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(self.mesh, PartitionSpec())
+            )
         if self.sc.temperature > 0:
             nxt = jax.random.categorical(key, logits / self.sc.temperature)
         else:
@@ -145,14 +214,16 @@ class Engine:
         return nxt, cache, key
 
     def _prefill_fn(self, params, batch):
-        return self.model.prefill(params, batch, self.sc.max_len)
+        with self._mesh_ctx():
+            return self.model.prefill(params, batch, self.sc.max_len)
 
     def _prefill_masked_fn(self, params, batch, lengths):
         """Masked bucketed prefill: right-padded (B, bucket) tokens with true
         ``lengths`` (B,) — per-row logits/KV bit-identical to unpadded
         prefill (DESIGN.md §6).  Returns the greedy first token too, so
         admission needs no extra dispatch."""
-        logits, cache = self.model.prefill(params, batch, self.sc.max_len, lengths=lengths)
+        with self._mesh_ctx():
+            logits, cache = self.model.prefill(params, batch, self.sc.max_len, lengths=lengths)
         nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)[:, None].astype(jnp.int32)
         return nxt, cache
 
@@ -208,18 +279,26 @@ class Engine:
             raise ValueError(
                 f"prompt length {prompts.shape[1]} exceeds max_len {self.sc.max_len}"
             )
-        batch = {"tokens": jnp.asarray(prompts)}
+        batch = {"tokens": self._shard_batch(jnp.asarray(prompts))}
         if extras:
-            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+            batch.update({k: self._shard_batch(jnp.asarray(v)) for k, v in extras.items()})
         if self._prefill is not None:
             logits, cache = self._prefill(self.params, batch)
             nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)[:, None].astype(jnp.int32)
+            # the recurrent paths below place their cache at init and keep
+            # that placement through the loop; only the prefill output needs
+            # an explicit move onto the serve shardings
+            cache = self.shard_cache(cache, prompts.shape[0])
         elif self.sc.fused:
-            cache = self.model.init_cache(prompts.shape[0], self.sc.max_len)
-            nxt, cache, key = self._prime_loop(self.params, jnp.asarray(prompts), cache, key)
+            cache = self.shard_cache(
+                self.model.init_cache(prompts.shape[0], self.sc.max_len), prompts.shape[0]
+            )
+            nxt, cache, key = self._prime_loop(self.params, batch["tokens"], cache, key)
         else:
             # seed path: prime the state by stepping through the prompt
-            cache = self.model.init_cache(prompts.shape[0], self.sc.max_len)
+            cache = self.shard_cache(
+                self.model.init_cache(prompts.shape[0], self.sc.max_len), prompts.shape[0]
+            )
             nxt = jnp.asarray(prompts[:, :1])
             for t in range(prompts.shape[1]):
                 key, sub = jax.random.split(key)
@@ -246,7 +325,9 @@ class Engine:
                 f"bucket length {prompts.shape[1]} exceeds max_len {self.sc.max_len}"
             )
         return self._prefill_masked(
-            self.params, {"tokens": jnp.asarray(prompts)}, jnp.asarray(lengths, jnp.int32)
+            self.params,
+            {"tokens": self._shard_batch(jnp.asarray(prompts))},
+            self._shard_batch(jnp.asarray(lengths, jnp.int32)),
         )
 
     def decode_segment(self, token, cache, key, steps: int):

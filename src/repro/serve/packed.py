@@ -31,9 +31,13 @@ from ..configs.base import ArchConfig
 from ..kernels.ops import (
     RowPackedLinear,
     apply_fused_mlp,
+    apply_fused_mlp_sharded,
     apply_row_packed,
+    apply_row_packed_sharded,
+    mesh_axis_size,
     pack_linear_rows,
     pack_linear_rows_t,
+    shard_linear_windows,
 )
 from ..models import families as F
 from ..models.common import rms_norm
@@ -41,6 +45,7 @@ from ..models.common import rms_norm
 __all__ = [
     "pack_lm_mlps",
     "pack_lm_weights",
+    "shard_packed",
     "lm_decode_step_packed",
     "packed_byte_ratios",
 ]
@@ -77,9 +82,16 @@ def _stack_packs(packs) -> Dict:
     }
 
 
-def _stack_layers(ws: np.ndarray, m: int, a: int, pack_fn=pack_linear_rows) -> Dict:
-    """Pack every layer of a stacked (L, K, C) weight and stack the packs."""
-    return _stack_packs([pack_fn(ws[layer], m=m, a=a) for layer in range(ws.shape[0])])
+def _stack_layers(
+    ws: np.ndarray, m: int, a: int, pack_fn=pack_linear_rows, shards: int = 1
+) -> Dict:
+    """Pack every layer of a stacked (L, K, C) weight and stack the packs.
+    ``shards`` pads each pack's window axis to a multiple (no-op windows) so
+    the stacked window axis splits evenly over a TP mesh axis."""
+    return _stack_packs([
+        shard_linear_windows(pack_fn(ws[layer], m=m, a=a), shards)
+        for layer in range(ws.shape[0])
+    ])
 
 
 def _pack_one(p: RowPackedLinear) -> Dict:
@@ -118,6 +130,7 @@ def pack_lm_weights(
     a: int = 16,
     scope: str = "all",
     fused_mlp: bool = True,
+    shards: int = 1,
 ) -> Dict:
     """Pack the dense-family decode-step weights; returns a structured dict.
 
@@ -126,17 +139,23 @@ def pack_lm_weights(
     LM head (tied embeddings stay a gather + transpose-einsum — there is no
     separate weight to pack).  ``fused_mlp`` selects the megakernel operand
     layout (``w_down`` packed transposed via ``pack_linear_rows_t``) vs the
-    3-dispatch baseline layout (``w_down`` packed plain)."""
+    3-dispatch baseline layout (``w_down`` packed plain).  ``shards`` pads
+    every window axis to a multiple (no-op windows, exact) so the packs can
+    be split over a TP mesh axis of that size — place them with
+    :func:`shard_packed` (DESIGN.md §8)."""
     assert cfg.family == "dense", "packed decode path targets the dense family"
     assert scope in ("mlp", "all"), scope
     ffn = params["layers"]["ffn"]
     mlp: Dict = {
-        name: _stack_layers(np.asarray(ffn[name]), m, a) for name in ("w_gate", "w_up")
+        name: _stack_layers(np.asarray(ffn[name]), m, a, shards=shards)
+        for name in ("w_gate", "w_up")
     }
     if fused_mlp:
-        mlp["w_down_t"] = _stack_layers(np.asarray(ffn["w_down"]), m, a, pack_linear_rows_t)
+        mlp["w_down_t"] = _stack_layers(
+            np.asarray(ffn["w_down"]), m, a, pack_linear_rows_t, shards=shards
+        )
     else:
-        mlp["w_down"] = _stack_layers(np.asarray(ffn["w_down"]), m, a)
+        mlp["w_down"] = _stack_layers(np.asarray(ffn["w_down"]), m, a, shards=shards)
     out: Dict = {
         "mlp": mlp,
         "attn": None,
@@ -154,10 +173,46 @@ def pack_lm_weights(
                 if name == "wo"
                 else w.reshape(w.shape[0], w.shape[1], -1)  # q/k/v: (L, d, nh*hd)
             )
-            attn[name] = _stack_layers(flat, m, a)
+            attn[name] = _stack_layers(flat, m, a, shards=shards)
         out["attn"] = attn
         if not cfg.tie_embeddings:
-            out["head"] = _pack_one(pack_linear_rows(np.asarray(params["lm_head"]), m=m, a=a))
+            out["head"] = _pack_one(
+                shard_linear_windows(
+                    pack_linear_rows(np.asarray(params["lm_head"]), m=m, a=a), shards
+                )
+            )
+    return out
+
+
+def shard_packed(packed: Dict, mesh) -> Dict:
+    """Place a ``pack_lm_weights`` dict on a mesh: window axes split over the
+    ``model`` mesh axis via ``dist.sharding.window_sharding`` (values *and*
+    the int8 positions metadata — identical specs, a positions array sharded
+    differently from its values would index the wrong shard's lanes).  Layer
+    stacks ``(L, T, K, S)`` shard axis 1, the single LM-head pack ``(T, K,
+    S)`` axis 0.  Window counts the axis does not divide (pack without
+    ``shards=tp``) replicate — never an error.  Degenerate meshes return the
+    dict as-is."""
+    if mesh_axis_size(mesh, "model") == 1:
+        return packed
+    from ..dist.sharding import window_sharding
+
+    def place(entry: Dict, axis: int) -> Dict:
+        t = entry["values"].shape[axis]
+        out = dict(entry)
+        for leaf in ("values", "positions"):
+            sh = window_sharding(mesh, t, entry[leaf].ndim, axis=axis)
+            out[leaf] = jax.device_put(entry[leaf], sh)
+        return out
+
+    out = dict(packed)
+    if "mlp" not in packed:  # legacy flat pack_lm_mlps layout
+        return {name: place(entry, 1) for name, entry in packed.items()}
+    out["mlp"] = {name: place(e, 1) for name, e in packed["mlp"].items()}
+    if packed.get("attn"):
+        out["attn"] = {name: place(e, 1) for name, e in packed["attn"].items()}
+    if packed.get("head") is not None:
+        out["head"] = place(packed["head"], 0)
     return out
 
 
@@ -196,18 +251,28 @@ def packed_byte_ratios(packed: Dict, value_bytes: Optional[int] = None) -> Dict[
 # --------------------------------------------------------------------------
 
 
-def lm_decode_step_packed(params, packed, token, cache, cfg):
+def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
     """One-token decode with VUSA-packed weights (dense family only).
 
     ``packed`` is a ``pack_lm_weights`` dict (fused megakernel MLP and,
     with ``scope="all"``, packed attention projections + LM head) or a
-    legacy ``pack_lm_mlps`` flat dict (MLP-only, 3-dispatch baseline)."""
+    legacy ``pack_lm_mlps`` flat dict (MLP-only, 3-dispatch baseline).
+
+    ``mesh`` routes every packed matmul through the window-sharded appliers
+    (``kernels.ops.apply_*_sharded``): each device of the ``model`` axis
+    reconstructs only its windows and the partial outputs are reassembled
+    with a psum (fused MLP — ff is the reduction dim) or a tiled all-gather
+    (column windows: gate/up/qkv/o/head).  A mesh whose ``model`` axis is
+    absent or size 1 is the degenerate case — identical program to
+    ``mesh=None`` (DESIGN.md §8)."""
     assert cfg.family == "dense", "packed decode path targets the dense family"
     if "mlp" not in packed:  # legacy flat layout
         packed = {"mlp": packed, "attn": None, "head": None, "fused_mlp": False}
     mlp = packed["mlp"]
     attn = packed["attn"]
     fused = packed.get("fused_mlp", "w_down_t" in mlp)
+    if mesh_axis_size(mesh, "model") == 1:
+        mesh = None  # degenerate: plain single-device appliers
 
     x = F._embed_tokens(params, token, cfg)
     pos = cache["pos"]
@@ -215,7 +280,10 @@ def lm_decode_step_packed(params, packed, token, cache, cfg):
     from ..models.layers import attention_decode  # noqa: PLC0415
 
     def papply(entry, vals, poss, x2):
-        return apply_row_packed(x2, _as_linear(entry, vals, poss))
+        lin = _as_linear(entry, vals, poss)
+        if mesh is not None:
+            return apply_row_packed_sharded(x2, lin, mesh)
+        return apply_row_packed(x2, lin)
 
     def arrays(group):  # scanned leaves only; meta stays static
         return {n: {"values": e["values"], "positions": e["positions"]} for n, e in group.items()}
@@ -251,7 +319,12 @@ def lm_decode_step_packed(params, packed, token, cache, cfg):
             def lin(name):
                 return _as_linear(mlp[name], mlp_l[name]["values"], mlp_l[name]["positions"])
 
-            y2 = apply_fused_mlp(hf, lin("w_gate"), lin("w_up"), lin("w_down_t"))
+            if mesh is not None:
+                y2 = apply_fused_mlp_sharded(
+                    hf, lin("w_gate"), lin("w_up"), lin("w_down_t"), mesh
+                )
+            else:
+                y2 = apply_fused_mlp(hf, lin("w_gate"), lin("w_up"), lin("w_down_t"))
         else:  # 3-dispatch baseline: gate/up/down round-trip the (B, ff)
 
             def pap(name, x2):
@@ -267,8 +340,9 @@ def lm_decode_step_packed(params, packed, token, cache, cfg):
     x = rms_norm(x, params["final_norm"])
     if packed.get("head") is not None:
         b, s, d = x.shape
-        head_p = _as_linear(packed["head"], packed["head"]["values"], packed["head"]["positions"])
-        logits = apply_row_packed(x.reshape(b * s, d), head_p).reshape(b, s, -1)
+        head = packed["head"]
+        logits = papply(head, head["values"], head["positions"], x.reshape(b * s, d))
+        logits = logits.reshape(b, s, -1)
     else:
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
         logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))

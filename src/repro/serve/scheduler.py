@@ -132,11 +132,28 @@ class Scheduler:
         self._completions: Dict[int, Completion] = {}
         self._next_rid = 0
         self._slot: List[_Slot] = [_Slot() for _ in range(slots)]
-        # device state: slot-stacked cache, per-slot tokens and raw key data
+        # device state: slot-stacked cache, per-slot tokens and raw key data.
+        # Under a mesh the slot axis — the serve path's batch dim — is
+        # sharded over the DP mesh axes (DESIGN.md §8): the KV pool's bytes
+        # scale out with ``data`` while the packed weights scale out with
+        # ``model`` inside the engine's decode step.
         kshape = jax.random.key_data(jax.random.key(0)).shape
         self._cache = self.model.init_slot_cache(slots, engine.sc.max_len)
         self._token = jnp.zeros((slots, 1, 1), jnp.int32)
         self._kdata = jnp.zeros((slots,) + kshape, jnp.uint32)
+        if engine.mesh is not None:
+            from ..dist.sharding import batch_sharding
+            from ..models.cache import slot_shardings
+
+            self._cache = jax.device_put(
+                self._cache, slot_shardings(self._cache, engine.mesh)
+            )
+            self._token = jax.device_put(
+                self._token, batch_sharding(engine.mesh, slots, self._token.ndim)
+            )
+            self._kdata = jax.device_put(
+                self._kdata, batch_sharding(engine.mesh, slots, self._kdata.ndim)
+            )
         self._batch_axes = self.model.cache_batch_axes(engine.sc.max_len)
         # donate the pool state: segments and admissions update it in place
         self._seg = jax.jit(

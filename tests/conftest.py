@@ -1,0 +1,42 @@
+"""Test-process environment: force a multi-device CPU backend.
+
+The sharded-serving tests (tests/test_serve_sharded.py, DESIGN.md §8) need a
+real device mesh, and CI has no accelerators — so the suite runs under
+``--xla_force_host_platform_device_count=8`` (2x4 is the largest mesh the
+differential tests drive).  The flag must be set *before* jax initialises its
+backend, and pytest imports conftest.py before any test module, so this is
+the one reliable place to set it without spawning every mesh test into a
+subprocess.
+
+``REPRO_SINGLE_DEVICE=1`` opts out (the CI matrix runs one such leg to cover
+the single-device degenerate path); tests that need a mesh skip themselves
+via :func:`requires_devices`.  Unrelated tests are unaffected either way:
+un-sharded computations run on device 0 regardless of how many host devices
+exist.
+"""
+
+import os
+import sys
+
+if os.environ.get("REPRO_SINGLE_DEVICE") != "1":
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        assert "jax" not in sys.modules, (
+            "conftest.py must run before jax is imported to force the "
+            "multi-device CPU backend (a plugin imported jax too early?)"
+        )
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+
+import pytest  # noqa: E402
+
+
+def requires_devices(n: int):
+    """Skip-marker for tests that need at least ``n`` devices (e.g. under
+    REPRO_SINGLE_DEVICE=1, or a hand-set XLA_FLAGS without the force flag)."""
+    import jax
+
+    return pytest.mark.skipif(
+        len(jax.devices()) < n, reason=f"needs >= {n} devices, have {len(jax.devices())}"
+    )

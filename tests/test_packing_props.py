@@ -1,0 +1,164 @@
+"""Property-based tests for the VUSA pack formats (core/packing.py):
+pack/unpack roundtrips, window-count invariants and the shard_windows view,
+across random shapes, sparsities in [0, 0.99] and non-divisible edges.
+
+Uses the optional-hypothesis shim (tests/hypothesis_compat.py): with
+hypothesis installed (CI) the @given tests fuzz; without it they skip and the
+example-based edge tests below still pin the invariants.
+"""
+
+import numpy as np
+from hypothesis_compat import given, settings, st
+
+from repro.core.packing import (
+    pack_blocks,
+    pack_exact,
+    pack_rows,
+    pack_rows_t,
+    shard_windows,
+    unpack_blocks,
+    unpack_exact,
+    unpack_rows,
+)
+
+
+def _sparse(seed, k, c, sparsity):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k, c)) * (rng.random((k, c)) > sparsity)
+    return w.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# row format (the serving path's format)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    k=st.integers(1, 48),
+    c=st.integers(1, 300),
+    m=st.sampled_from([8, 32, 128]),
+    a=st.sampled_from([4, 8, 16]),
+    sp=st.floats(0.0, 0.99),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=40, deadline=None)
+def test_pack_rows_roundtrip_prop(k, c, m, a, sp, seed):
+    """unpack(pack(w)) == w exactly, any shape/sparsity (c % m free)."""
+    w = _sparse(seed, k, c, sp)
+    p = pack_rows(w, m=m, a=a)
+    np.testing.assert_array_equal(unpack_rows(p), w)
+    # window-count invariant: windows tile the (padded) column dim
+    assert p.values.shape[0] == -(-c // m)
+    # job invariant: slots = a * ceil(max row-nnz per window / a)
+    max_nnz = 1
+    for t in range(p.values.shape[0]):
+        blk = w[:, t * m : (t + 1) * m]
+        max_nnz = max(max_nnz, int((blk != 0).sum(axis=1).max(initial=1)))
+    assert p.values.shape[2] == a * -(-max_nnz // a)
+
+
+@given(
+    ff=st.integers(1, 200),
+    d=st.integers(1, 48),
+    m=st.sampled_from([8, 32]),
+    sp=st.floats(0.0, 0.99),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=30, deadline=None)
+def test_pack_rows_t_roundtrip_prop(ff, d, m, sp, seed):
+    """pack_rows_t windows the *leading* dim: unpack == w.T (the fused
+    megakernel's w_down contract, DESIGN.md §7)."""
+    w = _sparse(seed, ff, d, sp)
+    p = pack_rows_t(w, m=m, a=4)
+    np.testing.assert_array_equal(unpack_rows(p), w.T)
+    assert p.values.shape[0] == -(-ff // m)  # windows cover ff
+
+
+@given(
+    k=st.integers(1, 32),
+    c=st.integers(1, 200),
+    n=st.integers(1, 8),
+    sp=st.floats(0.0, 0.99),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=30, deadline=None)
+def test_shard_windows_prop(k, c, n, sp, seed):
+    """shard_windows pads to a divisible window count with exact no-ops:
+    unpack unchanged, pad windows all zero-value / -1-position."""
+    p = pack_rows(_sparse(seed, k, c, sp), m=32, a=4)
+    q = shard_windows(p, n)
+    assert q.values.shape[0] % n == 0
+    assert q.values.shape[0] - p.values.shape[0] < n
+    np.testing.assert_array_equal(unpack_rows(q), unpack_rows(p))
+    pad = q.values[p.values.shape[0] :]
+    assert (pad == 0).all()
+    assert (q.row_positions[p.values.shape[0] :] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# example-based edges (always run, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+
+def test_pack_rows_roundtrip_edges():
+    for k, c, m, a, sp in [
+        (1, 1, 128, 16, 0.0),  # single scalar
+        (7, 130, 128, 16, 0.85),  # c % m != 0 (the non-divisible ff edge)
+        (16, 128, 128, 4, 0.0),  # dense fallback: J = ceil(m/a) jobs
+        (5, 96, 32, 8, 0.99),  # near-empty
+        (3, 64, 32, 8, 1.0),  # fully zero: one all-idle job
+    ]:
+        w = _sparse(0, k, c, sp) if sp < 1.0 else np.zeros((k, c), np.float32)
+        p = pack_rows(w, m=m, a=a)
+        np.testing.assert_array_equal(unpack_rows(p), w)
+        assert p.values.shape[0] == -(-c // m)
+
+
+def test_pack_rows_t_matches_transpose():
+    w = _sparse(1, 80, 48, 0.85)  # ff=80 not divisible by m=32
+    p = pack_rows_t(w, m=32, a=8)
+    np.testing.assert_array_equal(unpack_rows(p), w.T)
+
+
+def test_shard_windows_edges():
+    p = pack_rows(_sparse(2, 8, 5 * 32 - 7, 0.8), m=32, a=8)  # 5 windows
+    assert shard_windows(p, 1) is p  # divisible: view is the pack itself
+    assert shard_windows(p, 5) is p
+    q = shard_windows(p, 4)  # 5 -> 8 windows
+    assert q.values.shape[0] == 8
+    np.testing.assert_array_equal(unpack_rows(q), unpack_rows(p))
+    try:
+        shard_windows(p, 0)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("shard_windows(p, 0) must raise")
+
+
+def test_shard_windows_twins_agree():
+    """core.packing.shard_windows (host/numpy) and its device twin
+    kernels.ops.shard_linear_windows must implement the *same* pad semantics
+    (tail windows, value 0, position -1, k/c/m/a unchanged) — the serve path
+    runs on the ops twin while the invariants are property-tested here, so
+    drift between them must fail loudly."""
+    from repro.kernels.ops import pack_linear_rows, shard_linear_windows
+
+    w = _sparse(5, 12, 5 * 32 - 3, 0.8)  # 5 windows
+    for n in (1, 2, 3, 4, 8):
+        host = shard_windows(pack_rows(w, m=32, a=8), n)
+        dev = shard_linear_windows(pack_linear_rows(w, m=32, a=8), n)
+        np.testing.assert_array_equal(np.asarray(dev.values), host.values)
+        np.testing.assert_array_equal(np.asarray(dev.positions), host.row_positions)
+        assert (dev.k, dev.c, dev.m, dev.a) == (host.k, host.c, host.m, host.a)
+
+
+def test_pack_blocks_roundtrip():
+    w = _sparse(3, 64, 256, 0.9)
+    p = pack_blocks(w, m_blk=16, a_blk=8, tile_n=128)
+    np.testing.assert_array_equal(unpack_blocks(p), w)
+
+
+def test_pack_exact_roundtrip():
+    w = _sparse(4, 9, 12, 0.6)
+    p = pack_exact(w, N=3, M=6, A=3)
+    np.testing.assert_array_equal(unpack_exact(p), w)
