@@ -593,6 +593,81 @@ def bench_admission():
           f"admit_s={b['admit_s']:.3f}vs{s['admit_s']:.3f}")
 
 
+def bench_faults():
+    """Goodput under faults (DESIGN.md §9): the same request stream served
+    clean and with a seeded ~1% request-fault rate (slot-cache NaN poisoning
+    — the guard + bounded dense-retry path).  Every faulted-arm completion
+    must be OK or FAILED_FALLBACK_OK with tokens bit-identical to the clean
+    arm, and sustained delivered tok/s must hold >= 90% of the clean run:
+    recovery costs one re-prime + re-decode of the afflicted request, never
+    a stall of the pool."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serve import Engine, FaultConfig, Request, Scheduler, ServeConfig, Status
+
+    cfg = get_smoke_config("llama3_2_1b")
+    params = build_model(cfg).init(jax.random.key(0))
+    slots, segment, max_len = 4, 4, 64
+    n_req = 64
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 100, 6).astype(np.int32) for _ in range(n_req)]
+
+    def requests():
+        return [
+            Request(prompt=prompts[i], max_new=24, seed=i) for i in range(n_req)
+        ]
+
+    # rids keep incrementing across the warmup + 3 timed runs (the scheduler
+    # is reused to keep its compiled programs); seed 17 at this rate faults
+    # exactly one rid in every 64-rid block, so each run serves a ~1%
+    # request-fault rate
+    arms = {"clean": None, "faulted": FaultConfig(seed=17, cache_nan_rate=0.013)}
+    stats, tokens = {}, {}
+    for arm, faults in arms.items():
+        sched = Scheduler(
+            Engine(cfg, params, ServeConfig(max_len=max_len, faults=faults)),
+            slots=slots, segment=segment,
+        )
+        done = sched.run(requests())  # warmup: compiles + first fault/retry
+        best = None
+        for _ in range(3):
+            done = sched.run(requests())
+            assert len(done) == n_req, "scheduler lost requests"
+            s = sched.stats()
+            if best is None or s["sustained_tok_per_s"] > best["sustained_tok_per_s"]:
+                best = s
+        stats[arm] = best
+        # rids run on across runs; rid % n_req recovers the prompt index
+        tokens[arm] = {rid % n_req: c.tokens for rid, c in done.items()}
+        for rid, c in done.items():
+            assert c.status in (Status.OK, Status.FAILED_FALLBACK_OK), (
+                f"{arm}: rid {rid} finished {c.status}"
+            )
+    n_fallback = stats["faulted"]["fallback"]
+    assert n_fallback >= 1, "fault plan injected nothing — bench is vacuous"
+    for rid in range(n_req):  # faults must never corrupt delivered tokens
+        np.testing.assert_array_equal(tokens["faulted"][rid], tokens["clean"][rid])
+    ratio = (
+        stats["faulted"]["sustained_tok_per_s"] / stats["clean"]["sustained_tok_per_s"]
+    )
+    assert ratio >= 0.9, f"goodput under faults collapsed: {ratio:.2f}x of clean"
+    _save("bench_faults", {
+        "clean_tok_per_s": stats["clean"]["sustained_tok_per_s"],
+        "faulted_tok_per_s": stats["faulted"]["sustained_tok_per_s"],
+        "goodput_ratio": ratio,
+        "fallback_requests": n_fallback,
+        "requests": n_req,
+        "slots": slots,
+        "segment": segment,
+    })
+    _emit("bench_faults", stats["faulted"]["decode_s"] * 1e6,
+          f"clean_tok_s={stats['clean']['sustained_tok_per_s']:.0f};"
+          f"faulted_tok_s={stats['faulted']['sustained_tok_per_s']:.0f};"
+          f"goodput={ratio:.3f};fallbacks={n_fallback}")
+
+
 _SHARDED_BENCH_CODE = """
 import json, time
 import jax, numpy as np
@@ -787,6 +862,7 @@ BENCHES = {
     "bench_packed_decode": bench_packed_decode,
     "bench_continuous_batching": bench_continuous_batching,
     "bench_admission": bench_admission,
+    "bench_faults": bench_faults,
     "bench_sharded_decode": bench_sharded_decode,
 }
 
@@ -822,6 +898,10 @@ BASELINE_METRICS = {
     # (e.g. an accidental all-gather of the weights per step), not CPU
     # "speedups"
     "bench_sharded_decode": ["dp_tok_per_s", "tp_tok_per_s", "dp_tp_tok_per_s"],
+    # goodput under a ~1% seeded request-fault rate: the ratio is the SLO
+    # (>= 0.9 asserted in-bench; the committed baseline holds 0.9 so the
+    # gate also sees a drop), faulted_tok_per_s is a conservative floor
+    "bench_faults": ["goodput_ratio", "faulted_tok_per_s"],
 }
 
 

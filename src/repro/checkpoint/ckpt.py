@@ -8,6 +8,12 @@ because the on-disk format is logical, not device-local).
 Writes are atomic (tmp dir + rename) and optionally asynchronous; a retention
 policy keeps the newest K steps.  This is the orbax-shaped subset the trainer
 needs, with zero external dependencies.
+
+Integrity (DESIGN.md §9): the manifest records per-leaf CRC32 and byte
+counts at save; restore re-verifies them, so a truncated or bit-flipped leaf
+file raises a clear ``ValueError`` instead of silently yielding garbage
+params.  Manifests written before this field existed still restore (no CRC
+to check), so old checkpoints stay readable.
 """
 
 from __future__ import annotations
@@ -15,6 +21,7 @@ from __future__ import annotations
 import json
 import shutil
 import threading
+import zlib
 from pathlib import Path
 from typing import Any, Optional, Tuple
 
@@ -48,7 +55,14 @@ def save(path: str | Path, step: int, tree: Any) -> Path:
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
         np.save(tmp / fname, arr)
-        manifest[key] = {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        raw = (tmp / fname).read_bytes()
+        manifest[key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "nbytes": len(raw),
+            "crc32": zlib.crc32(raw),
+        }
     (tmp / "manifest.json").write_text(json.dumps({"step": step, "leaves": manifest}))
     if final.exists():
         shutil.rmtree(final)
@@ -64,6 +78,38 @@ def latest_step(path: str | Path) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _load_leaf(d: Path, key: str, entry: dict) -> np.ndarray:
+    """Load one leaf file, verifying it against its manifest entry.  Every
+    corruption mode has a distinct, named error: a missing/truncated file,
+    a CRC mismatch (bit flip), or a decoded array whose shape/dtype disagree
+    with what was saved.  Pre-CRC manifests (no ``crc32``/``nbytes`` keys)
+    skip the byte checks but still verify shape/dtype."""
+    f = d / entry["file"]
+    if not f.exists():
+        raise ValueError(f"checkpoint leaf {key!r}: file {entry['file']} is missing")
+    raw = f.read_bytes()
+    if "nbytes" in entry and len(raw) != entry["nbytes"]:
+        raise ValueError(
+            f"checkpoint leaf {key!r}: file {entry['file']} is truncated or padded "
+            f"({len(raw)} bytes, manifest says {entry['nbytes']})"
+        )
+    if "crc32" in entry and zlib.crc32(raw) != entry["crc32"]:
+        raise ValueError(
+            f"checkpoint leaf {key!r}: CRC mismatch in {entry['file']} "
+            f"(on-disk corruption; re-fetch or fall back to an older step)"
+        )
+    try:
+        arr = np.load(f)
+    except Exception as e:
+        raise ValueError(f"checkpoint leaf {key!r}: undecodable npy {entry['file']}: {e}") from e
+    if list(arr.shape) != list(entry["shape"]) or str(arr.dtype) != entry["dtype"]:
+        raise ValueError(
+            f"checkpoint leaf {key!r}: decoded {arr.shape}/{arr.dtype}, manifest "
+            f"says {tuple(entry['shape'])}/{entry['dtype']}"
+        )
+    return arr
+
+
 def restore(path: str | Path, step: int, like: Any, shardings: Any = None) -> Any:
     """Restore into the structure of ``like``; place per ``shardings`` if given
     (this is where elastic re-sharding happens — the mesh of the restoring
@@ -76,7 +122,7 @@ def restore(path: str | Path, step: int, like: Any, shardings: Any = None) -> An
     for key in flat_like:
         if key not in manifest:
             raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = np.load(d / manifest[key]["file"])
+        arr = _load_leaf(d, key, manifest[key])
         if key in flat_shard and flat_shard[key] is not None:
             out[key] = jax.device_put(arr, flat_shard[key])
         else:

@@ -26,6 +26,7 @@ __all__ = [
     "ExactPacked", "pack_exact", "unpack_exact",
     "BlockPacked", "pack_blocks", "unpack_blocks",
     "RowPacked", "pack_rows", "pack_rows_t", "unpack_rows", "shard_windows",
+    "validate_rows",
 ]
 
 
@@ -279,6 +280,46 @@ def shard_windows(p: RowPacked, n_shards: int) -> RowPacked:
         [p.row_positions, np.full((pad,) + p.row_positions.shape[1:], -1, np.int8)]
     )
     return RowPacked(k=p.k, c=p.c, m=p.m, a=p.a, values=values, row_positions=positions)
+
+
+def validate_rows(p: RowPacked) -> None:
+    """Check a :class:`RowPacked`'s structural invariants; raise ``ValueError``
+    naming the first violation (DESIGN.md §9).
+
+    This is the pack/load-time integrity guard: a bit flip in the position
+    metadata (the "shifter setting") would silently scatter weight values
+    into the wrong lanes — finite, plausible-looking, and wrong — which the
+    runtime ``isfinite`` guard can never catch.  Bounds/dtype/shape checks
+    here are the only place such corruption is detectable, so every consumer
+    validates before serving a pack."""
+    v, q = np.asarray(p.values), np.asarray(p.row_positions)
+    if v.shape != q.shape:
+        raise ValueError(f"values shape {v.shape} != positions shape {q.shape}")
+    if q.dtype != np.int8:
+        raise ValueError(f"positions dtype must be int8, got {q.dtype}")
+    if v.ndim != 3:
+        raise ValueError(f"expected (T, K, S) pack, got shape {v.shape}")
+    if p.m < 1 or p.a < 1 or p.m > 128:
+        raise ValueError(f"window m={p.m} / slots a={p.a} out of range (int8 lanes)")
+    t, k, slots = v.shape
+    if k != p.k:
+        raise ValueError(f"pack rows {k} != declared k={p.k}")
+    if slots % p.a:
+        raise ValueError(f"slot count {slots} not a multiple of a={p.a}")
+    if t * p.m < p.c:
+        raise ValueError(f"{t} windows of {p.m} lanes cover {t * p.m} < c={p.c} columns")
+    # widen before comparing: m=128 does not fit int8, and int8 promotion
+    # would wrap it, corrupting the bound itself
+    q = q.astype(np.int32)
+    bad = (q < -1) | (q >= p.m)
+    if bad.any():
+        i = tuple(int(x) for x in np.argwhere(bad)[0])
+        raise ValueError(
+            f"position {int(q[i])} at {i} outside [-1, {p.m}) — corrupt metadata"
+        )
+    if not np.isfinite(v).all():
+        i = tuple(int(x) for x in np.argwhere(~np.isfinite(v))[0])
+        raise ValueError(f"non-finite packed value at {i}")
 
 
 def unpack_rows(p: RowPacked) -> np.ndarray:

@@ -2,6 +2,12 @@
 VUSA-pack, and serve batched synthetic requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch vusa_edge --smoke --packed
+
+With ``--requests N`` the launcher drives the continuous-batching Scheduler
+instead of one-shot generate, exposing the reliability knobs: per-request
+``--deadline-s``, a bounded queue via ``--queue-cap`` with ``--shed-policy``,
+and a seeded chaos mode (``--fault-rate``) that NaN-poisons that fraction of
+requests' slot caches to exercise the guard + dense-fallback path.
 """
 
 import argparse
@@ -13,7 +19,7 @@ from ..checkpoint import latest_step, restore
 from ..configs import get_config, get_smoke_config
 from ..core.pruning import prune_tree
 from ..models import build_model
-from ..serve import Engine, ServeConfig
+from ..serve import Engine, FaultConfig, Request, Scheduler, ServeConfig
 
 
 def main():
@@ -36,6 +42,30 @@ def main():
         "shard over 'data', packed-weight windows over 'model'; '1,1' (or "
         "omitting the flag) is the single-device path",
     )
+    ap.add_argument(
+        "--requests", type=int, default=0,
+        help="serve N synthetic requests through the continuous-batching "
+        "Scheduler (0 = one-shot batched generate)",
+    )
+    ap.add_argument("--slots", type=int, default=4, help="scheduler slot pool size")
+    ap.add_argument(
+        "--deadline-s", type=float, default=None,
+        help="per-request deadline (from arrival); blown deadlines finish TIMEOUT",
+    )
+    ap.add_argument(
+        "--queue-cap", type=int, default=None,
+        help="bound the scheduler queue; overflow handled per --shed-policy",
+    )
+    ap.add_argument(
+        "--shed-policy", default="reject",
+        choices=("reject", "shed-oldest", "shed-lowest-priority"),
+        help="who pays when the queue is full",
+    )
+    ap.add_argument(
+        "--fault-rate", type=float, default=0.0,
+        help="chaos mode: seeded fraction of requests whose slot cache gets "
+        "NaN-poisoned at admission (exercises guard + dense fallback)",
+    )
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -55,8 +85,35 @@ def main():
 
         mesh = make_serve_mesh(args.mesh)
         print(f"mesh {dict(mesh.shape)} over {len(mesh.devices.flat)} devices")
+    faults = FaultConfig(cache_nan_rate=args.fault_rate) if args.fault_rate > 0 else None
     eng = Engine(cfg, params, ServeConfig(max_len=args.prompt_len + args.max_new + 8,
-                                          packed_weights=args.packed), mesh=mesh)
+                                          packed_weights=args.packed, faults=faults),
+                 mesh=mesh)
+    if args.requests > 0:
+        sched = Scheduler(
+            eng, slots=args.slots, queue_cap=args.queue_cap,
+            shed_policy=args.shed_policy,
+        )
+        rng = np.random.default_rng(0)
+        for r in range(args.requests):
+            sched.submit(Request(
+                prompt=rng.integers(1, cfg.vocab, size=args.prompt_len).astype(np.int32),
+                max_new=args.max_new, seed=r, deadline_s=args.deadline_s,
+            ))
+        done = sched.run()
+        st = sched.stats()
+        print(f"{st['requests']} completions  {st['sustained_tok_per_s']:.0f} tok/s  "
+              f"latency p50 {st['latency_p50_s']*1e3:.0f}ms  "
+              f"ttft p50 {st['ttft_p50_s']*1e3:.0f}ms")
+        print("  " + "  ".join(
+            f"{k}={st[k]}" for k in
+            ("rejected", "shed", "timed_out", "cancelled", "fallback", "failed",
+             "quarantined")
+        ))
+        bad = sum(1 for c in done.values() if c.status.value not in ("OK", "FAILED_FALLBACK_OK"))
+        if bad:
+            print(f"  {bad} requests did not deliver tokens")
+        return
     prompts = np.ones((args.batch, args.prompt_len), np.int32)
     out = eng.generate(prompts, max_new=args.max_new)
     print(f"prefill {out['prefill_s']*1e3:.1f}ms  decode {out['decode_s']*1e3:.1f}ms  "

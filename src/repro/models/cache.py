@@ -24,6 +24,7 @@ __all__ = [
     "write_slot",
     "write_slots",
     "batch_axes",
+    "poison_slot",
     "reset_slot",
     "slot_count",
     "slot_shardings",
@@ -112,6 +113,25 @@ def slot_shardings(slot_cache, mesh):
     return jax.tree_util.tree_map(
         lambda leaf: batch_sharding(mesh, n, leaf.ndim), slot_cache
     )
+
+
+def poison_slot(slot_cache, i, value=jnp.nan):
+    """Write ``value`` (NaN by default) into element ``(i, 0, ..., 0)`` of
+    every inexact-dtype leaf of slot ``i`` — the fault-injection hook behind
+    ``FaultConfig.cache_nan_rate`` (DESIGN.md §9).  One poisoned element of
+    the KV/state cache reaches the logits within a single decode step (every
+    family's step reads its full state), so this models in-cache bit rot with
+    the smallest possible footprint.  Integer leaves (``pos``) are left
+    untouched: NaN has no integer encoding and corrupting ``pos`` would
+    change control flow rather than numerics."""
+
+    def one(leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return leaf
+        idx = (i,) + (0,) * (leaf.ndim - 1)
+        return leaf.at[idx].set(jnp.asarray(value, leaf.dtype))
+
+    return jax.tree_util.tree_map(one, slot_cache)
 
 
 def reset_slot(slot_cache, i: int):

@@ -1,2 +1,6 @@
 from .engine import Engine, ServeConfig  # noqa: F401
-from .scheduler import Completion, Request, Scheduler  # noqa: F401
+from .faults import FaultConfig  # noqa: F401
+from .scheduler import Completion, Request, Scheduler, Status  # noqa: F401
+
+# validate_packed lives in .packed, imported lazily there to keep the serve
+# package importable without pulling the kernels module in.

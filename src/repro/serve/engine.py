@@ -28,6 +28,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..models import build_model
+from .faults import FaultConfig
 
 __all__ = ["ServeConfig", "Engine"]
 
@@ -50,6 +51,11 @@ class ServeConfig:
     # tuple = powers of two from 8 up to max_len.  One compiled prefill
     # program per (bucket, batch-bucket) serves any prompt length.
     prefill_buckets: tuple = ()
+    # seeded fault-injection plan (DESIGN.md §9); None = no faults.  Pack
+    # corruption is applied at Engine init (position flips before load
+    # validation, value NaNs after); cache poisoning and admission stalls
+    # are consumed by the Scheduler per admitted request.
+    faults: Optional[FaultConfig] = None
 
     def __post_init__(self):
         if self.packed_weights is True:
@@ -76,9 +82,10 @@ class Engine:
         self.model = build_model(cfg)
         self.mesh = mesh
         self._packed = None
+        self._quarantined = False
         if sc.packed_weights:
             from ..kernels.ops import mesh_axis_size  # local import: needs kernels
-            from .packed import pack_lm_weights, shard_packed
+            from .packed import pack_lm_weights, shard_packed, validate_packed
 
             # pack from the host params before any device placement, then
             # split the window axes over the model mesh axis
@@ -87,6 +94,18 @@ class Engine:
                 scope=sc.packed_weights, fused_mlp=sc.fused_mlp,
                 shards=mesh_axis_size(mesh, "model"),
             )
+            f = sc.faults
+            if f is not None and (f.pack_position_flips or f.pack_value_nans):
+                from .faults import corrupt_pack_positions, corrupt_pack_values
+
+                # position flips land *before* load validation — a corrupted
+                # metadata byte must make the Engine refuse the pack here,
+                # never serve from it.  Value NaNs land *after* validation,
+                # modelling post-load in-memory corruption that only the
+                # runtime isfinite guard can catch.
+                self._packed = corrupt_pack_positions(self._packed, f)
+                validate_packed(self._packed)
+                self._packed = corrupt_pack_values(self._packed, f)
             if mesh is not None:
                 self._packed = shard_packed(self._packed, mesh)
         if mesh is not None:
@@ -150,17 +169,23 @@ class Engine:
         )
 
     # -- jitted bodies --------------------------------------------------------
-    def _decode_fn(self, params, token, cache, key):
+    def _decode_impl(self, params, token, cache, key, packed):
+        """One decode step through ``packed`` (or dense when None).  Returns
+        ``(next_token (B, 1), cache, ok (B,))`` where ``ok`` is the per-row
+        integrity guard — ``isfinite`` over the fp32 logits (DESIGN.md §9).
+        Computed on device and carried through the fused scan, it costs no
+        extra host sync: the scheduler fetches it with the segment tokens."""
         with self._mesh_ctx():
-            if self._packed is not None:
+            if packed is not None:
                 from .packed import lm_decode_step_packed
 
                 logits, cache = lm_decode_step_packed(
-                    params, self._packed, token, cache, self.cfg, mesh=self.mesh
+                    params, packed, token, cache, self.cfg, mesh=self.mesh
                 )
             else:
                 logits, cache = self.model.decode_step(params, token, cache)
         logits = logits[:, -1].astype(jnp.float32)
+        ok = jnp.isfinite(logits).all(axis=-1)
         if self.mesh is not None:
             # Pin the sampling computation replicated.  Under the default
             # (non-partitionable) threefry lowering, random bits generated
@@ -178,26 +203,39 @@ class Engine:
             nxt = jax.random.categorical(key, logits / self.sc.temperature)
         else:
             nxt = jnp.argmax(logits, axis=-1)
-        return nxt.astype(jnp.int32)[:, None], cache
+        return nxt.astype(jnp.int32)[:, None], cache, ok
+
+    def _decode_fn(self, params, token, cache, key):
+        """Decode step on the engine's configured path: packed when a pack is
+        loaded and not quarantined, dense otherwise.  The branch binds at
+        trace time; ``quarantine_packed`` re-jits so it re-binds."""
+        packed = None if self._quarantined else self._packed
+        return self._decode_impl(params, token, cache, key, packed)
+
+    def _decode_dense_fn(self, params, token, cache, key):
+        """Decode step forced onto the dense path regardless of pack state —
+        the fallback the scheduler re-serves guard-tripped requests on."""
+        return self._decode_impl(params, token, cache, key, None)
 
     def _decode_loop_fn(self, params, token, cache, key, steps: int):
         """Fused decode: ``steps`` model steps in one on-device scan.
 
         The scan's stacked output is the pre-allocated (steps, B) token
-        buffer; sampling keys are split on device each step, mirroring the
-        host loop's ``jax.random.split`` sequence exactly.
+        buffer plus the per-step (B,) integrity flags; sampling keys are
+        split on device each step, mirroring the host loop's
+        ``jax.random.split`` sequence exactly.
         """
 
         def body(carry, _):
             token, cache, key = carry
             key, sub = jax.random.split(key)
-            token, cache = self._decode_fn(params, token, cache, sub)
-            return (token, cache, key), token[:, 0]
+            token, cache, ok = self._decode_fn(params, token, cache, sub)
+            return (token, cache, key), (token[:, 0], ok)
 
-        (token, cache, key), toks = jax.lax.scan(
+        (token, cache, key), (toks, okg) = jax.lax.scan(
             body, (token, cache, key), None, length=steps
         )
-        return toks.T, token, cache, key  # (B, steps)
+        return toks.T, okg.T, token, cache, key  # (B, steps) each
 
     def _prime_loop_fn(self, params, prompts, cache, key):
         """Recurrent-family prompt priming: scan the prompt through decode
@@ -206,7 +244,7 @@ class Engine:
         def body(carry, tok):
             _, cache, key = carry
             key, sub = jax.random.split(key)
-            nxt, cache = self._decode_fn(params, tok[:, None], cache, sub)
+            nxt, cache, _ = self._decode_fn(params, tok[:, None], cache, sub)
             return (nxt, cache, key), None
 
         init = (prompts[:, :1], cache, key)
@@ -264,6 +302,46 @@ class Engine:
                 return b
         return n  # unreachable for admitted prompts; keeps the helper total
 
+    # -- integrity / degradation ----------------------------------------------
+    @property
+    def quarantined(self) -> bool:
+        return self._quarantined
+
+    @property
+    def packed_active(self) -> bool:
+        """True while decode actually runs through the packed path."""
+        return self._packed is not None and not self._quarantined
+
+    def quarantine_packed(self) -> bool:
+        """Permanently drop the packed decode path for this engine (called by
+        the scheduler when a slot trips the non-finite guard under packed
+        weights — DESIGN.md §9).  Dense weights are always resident, so the
+        dense path needs no reload; the jitted entry points are re-wrapped so
+        the trace-time packed/dense branch re-binds.  Returns True if the
+        engine transitioned, False if there was nothing to quarantine."""
+        if not self.packed_active:
+            return False
+        self._quarantined = True
+        self._decode = jax.jit(self._decode_fn)
+        self._decode_loop = jax.jit(self._decode_loop_fn, static_argnums=(4,))
+        self._prime_loop = jax.jit(self._prime_loop_fn)
+        return True
+
+    def _validate_tokens(self, tokens) -> None:
+        """Reject out-of-range token ids before they reach the embedding
+        gather.  ``params["embed"][tokens]`` silently wraps negative ids and
+        clamps ids >= vocab on accelerator backends, so a malformed prompt
+        would otherwise generate from the wrong embedding row with no error
+        anywhere downstream."""
+        toks = np.asarray(tokens)
+        bad = (toks < 0) | (toks >= self.cfg.vocab)
+        if bad.any():
+            idx = tuple(int(x) for x in np.argwhere(bad)[0])
+            raise ValueError(
+                f"token id {int(toks[idx])} at position {idx} is outside "
+                f"[0, vocab={self.cfg.vocab})"
+            )
+
     # -- reusable entry points (used by generate and serve/scheduler.py) ------
     def prime(self, prompts, key, extras: Optional[Dict] = None):
         """Run the prompt through the model: returns ``(first_token, cache,
@@ -279,6 +357,7 @@ class Engine:
             raise ValueError(
                 f"prompt length {prompts.shape[1]} exceeds max_len {self.sc.max_len}"
             )
+        self._validate_tokens(prompts)
         batch = {"tokens": self._shard_batch(jnp.asarray(prompts))}
         if extras:
             batch.update({k: self._shard_batch(jnp.asarray(v)) for k, v in extras.items()})
@@ -303,7 +382,7 @@ class Engine:
             for t in range(prompts.shape[1]):
                 key, sub = jax.random.split(key)
                 tok = jnp.asarray(prompts[:, t : t + 1])
-                nxt, cache = self._decode(self.params, tok, cache, sub)
+                nxt, cache, _ = self._decode(self.params, tok, cache, sub)
         return nxt, cache, key
 
     def prime_many(self, prompts, lengths):
@@ -324,6 +403,7 @@ class Engine:
             raise ValueError(
                 f"bucket length {prompts.shape[1]} exceeds max_len {self.sc.max_len}"
             )
+        self._validate_tokens(prompts)
         return self._prefill_masked(
             self.params,
             {"tokens": self._shard_batch(jnp.asarray(prompts))},
@@ -332,7 +412,9 @@ class Engine:
 
     def decode_segment(self, token, cache, key, steps: int):
         """``steps`` fused decode steps in one dispatch: returns
-        ``(tokens (B, steps), last_token, cache, key)``."""
+        ``(tokens (B, steps), ok (B, steps), last_token, cache, key)`` where
+        ``ok[b, t]`` is the on-device integrity flag for row ``b`` at step
+        ``t`` (False once logits go non-finite)."""
         return self._decode_loop(self.params, token, cache, key, steps)
 
     # -- public API -----------------------------------------------------------
@@ -363,21 +445,24 @@ class Engine:
 
         t0 = time.time()
         if self.sc.fused:
-            toks, _, cache, key = self.decode_segment(nxt, cache, key, max_new - 1)
+            toks, okg, _, cache, key = self.decode_segment(nxt, cache, key, max_new - 1)
             jax.block_until_ready(toks)
             t_decode = time.time() - t0
             tokens = np.concatenate([np.asarray(nxt), np.asarray(toks)], axis=1)
+            finite = bool(np.asarray(okg).all())
         else:
-            out = [np.asarray(nxt)]
+            out, finite = [np.asarray(nxt)], True
             for _ in range(max_new - 1):
                 key, sub = jax.random.split(key)
-                nxt, cache = self._decode(self.params, nxt, cache, sub)
+                nxt, cache, ok = self._decode(self.params, nxt, cache, sub)
                 out.append(np.asarray(nxt))
+                finite = finite and bool(np.asarray(ok).all())
             jax.block_until_ready(nxt)
             t_decode = time.time() - t0
             tokens = np.concatenate(out, axis=1)
         return {
             "tokens": tokens,
+            "finite": finite,
             "prefill_s": t_prefill,
             "decode_s": t_decode,
             "tok_per_s": b * (max_new - 1) / max(t_decode, 1e-9),

@@ -1,0 +1,156 @@
+"""Seeded, deterministic fault injection for the serve stack (DESIGN.md §9).
+
+Production serving sees faults the benign-world scheduler never models: a
+flipped bit in packed weight metadata sitting in HBM, a NaN creeping into a
+slot's KV/state cache, an admission path that stalls.  This module provides
+injectors for each, all derived from a :class:`FaultConfig` seed so chaos
+tests and the goodput-under-faults benchmark are bit-reproducible:
+
+* ``corrupt_pack_positions``  — flip packed *position* metadata out of range.
+  These are the faults ``serve.packed.validate_packed`` catches at load time
+  (the Engine refuses to serve a pack that fails validation).
+* ``corrupt_pack_values``     — set packed *values* to NaN, simulating
+  post-load in-memory corruption.  Applied after validation; detected at
+  runtime by the per-slot ``isfinite`` guard carried through the decode scan.
+* cache poisoning             — ``FaultConfig.wants_cache_nan`` tells the
+  Scheduler which admitted requests get one NaN poked into their slot cache
+  (``models.cache.poison_slot``); the NaN propagates to the logits within
+  one step and trips the same runtime guard.
+* admission stalls            — ``wants_stall``/``stall_s`` make the
+  Scheduler sleep inside the admission path, modelling a slow host.
+
+Every decision is a pure function of ``(seed, rid)`` (or an explicit rid
+list), never of wall-clock or global RNG state, so a faulted run can be
+replayed exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import numpy as np
+
+__all__ = [
+    "FaultConfig",
+    "corrupt_pack_positions",
+    "corrupt_pack_values",
+]
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    """Reproducible fault plan, wired through ``ServeConfig.faults``.
+
+    ``pack_position_flips`` corrupt packed metadata *before* load validation
+    (the Engine must refuse the pack); ``pack_value_nans`` corrupt packed
+    values *after* validation (the runtime guard must catch them).
+    ``cache_nan_rate`` poisons each admitted request's slot cache with
+    probability drawn from ``(seed, rid)``; ``cache_nan_rids`` names faulted
+    requests explicitly (union of both applies).  ``cache_nan_once`` makes a
+    per-rid fault transient — the dense/fallback retry of that request runs
+    clean — while ``False`` models a persistent fault that also kills the
+    bounded retry.  ``stall_s`` sleeps the admission path for each request
+    selected by ``stall_rate``/``stall_rids``."""
+
+    seed: int = 0
+    pack_position_flips: int = 0
+    pack_value_nans: int = 0
+    cache_nan_rate: float = 0.0
+    cache_nan_rids: Tuple[int, ...] = ()
+    cache_nan_once: bool = True
+    stall_s: float = 0.0
+    stall_rate: float = 0.0
+    stall_rids: Tuple[int, ...] = ()
+
+    def _draw(self, rid: int, salt: int) -> float:
+        return float(np.random.default_rng((self.seed, salt, rid)).random())
+
+    def wants_cache_nan(self, rid: int) -> bool:
+        if rid in self.cache_nan_rids:
+            return True
+        return self.cache_nan_rate > 0 and self._draw(rid, 1) < self.cache_nan_rate
+
+    def wants_stall(self, rid: int) -> bool:
+        if self.stall_s <= 0:
+            return False
+        if rid in self.stall_rids:
+            return True
+        return self.stall_rate > 0 and self._draw(rid, 2) < self.stall_rate
+
+
+# --------------------------------------------------------------------------
+# packed-weight corruption
+# --------------------------------------------------------------------------
+
+
+def _pack_entries(packed: Dict):
+    """Yield (group, name, entry) for every pack entry of a
+    ``pack_lm_weights`` dict (legacy flat dicts iterate as one group)."""
+    if "mlp" not in packed:
+        for name, e in packed.items():
+            yield packed, name, e
+        return
+    for name, e in packed["mlp"].items():
+        yield packed["mlp"], name, e
+    if packed.get("attn"):
+        for name, e in packed["attn"].items():
+            yield packed["attn"], name, e
+    if packed.get("head") is not None:
+        yield packed, "head", packed["head"]
+
+
+def _corrupt(packed: Dict, n: int, seed: int, leaf: str, value, occupied_only=False) -> Dict:
+    """Return a copy of ``packed`` with ``n`` seeded single-element flips of
+    ``leaf`` ("values" or "positions").  With ``occupied_only`` the flip
+    lands on a slot whose position is >= 0 — an idle slot's value is masked
+    out of the reconstruction (``where(pos == lane, v, 0)``), so corrupting
+    one would be a silent no-op rather than a detectable fault.  The copy is
+    shallow except along the corrupted entries, so the uncorrupted arrays
+    are shared, not duplicated."""
+    rng = np.random.default_rng(seed)
+    out = {
+        k: (dict(v) if isinstance(v, dict) else v) for k, v in packed.items()
+    }
+    # list entries over the copied dict so mutation stays local to `out`
+    for _ in range(n):
+        targets = list(_pack_entries(out))
+        gi = int(rng.integers(len(targets)))
+        group, name, e = targets[gi]
+        e = dict(e)
+        arr = e[leaf]
+        if occupied_only:
+            occ = np.argwhere(np.asarray(e["positions"]) >= 0)
+            if not len(occ):  # fully idle entry: no live slot to corrupt
+                continue
+            idx = tuple(int(x) for x in occ[int(rng.integers(len(occ)))])
+        else:
+            flat = int(rng.integers(arr.size))
+            idx = np.unravel_index(flat, arr.shape)
+        e[leaf] = arr.at[idx].set(value)
+        group[name] = e
+    return out
+
+
+def corrupt_pack_values(packed: Dict, cfg: FaultConfig) -> Dict:
+    """NaN-flip ``cfg.pack_value_nans`` packed value slots (post-load
+    corruption — the runtime isfinite guard's job to catch)."""
+    if cfg.pack_value_nans <= 0:
+        return packed
+    return _corrupt(
+        packed, cfg.pack_value_nans, cfg.seed, "values", math.nan, occupied_only=True
+    )
+
+
+def corrupt_pack_positions(packed: Dict, cfg: FaultConfig) -> Dict:
+    """Flip ``cfg.pack_position_flips`` packed position bytes out of range
+    (pre-validation corruption — ``validate_packed`` must refuse the pack).
+    The corrupt value is ``-2``: valid positions live in ``[-1, m)``, so
+    ``-2`` is out of range at every window width and always representable
+    in the int8 metadata (``m`` itself may not be, e.g. ``m=128``)."""
+    if cfg.pack_position_flips <= 0:
+        return packed
+    return _corrupt(
+        packed, cfg.pack_position_flips, cfg.seed + 1, "positions", np.int8(-2)
+    )

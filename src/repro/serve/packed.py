@@ -48,6 +48,7 @@ __all__ = [
     "shard_packed",
     "lm_decode_step_packed",
     "packed_byte_ratios",
+    "validate_packed",
 ]
 
 ATTN_NAMES = ("wq", "wk", "wv", "wo")
@@ -181,6 +182,7 @@ def pack_lm_weights(
                     pack_linear_rows(np.asarray(params["lm_head"]), m=m, a=a), shards
                 )
             )
+    validate_packed(out)  # pack-time guard: never hand out a malformed pack
     return out
 
 
@@ -216,12 +218,9 @@ def shard_packed(packed: Dict, mesh) -> Dict:
     return out
 
 
-def packed_byte_ratios(packed: Dict, value_bytes: Optional[int] = None) -> Dict[str, float]:
-    """Per-weight and total packed/dense HBM byte ratios (int8 positions).
-
-    Accepts both the structured ``pack_lm_weights`` dict and the legacy flat
-    ``pack_lm_mlps`` dict.  ``value_bytes`` defaults to the packed value
-    itemsize."""
+def _flat_entries(packed: Dict) -> Dict[str, Dict]:
+    """Flatten a pack dict (structured ``pack_lm_weights`` or legacy flat
+    ``pack_lm_mlps``) into ``{name: entry}``."""
     flat: Dict[str, Dict] = {}
     if "mlp" in packed:
         flat.update(packed["mlp"])
@@ -231,6 +230,66 @@ def packed_byte_ratios(packed: Dict, value_bytes: Optional[int] = None) -> Dict[
             flat["lm_head"] = packed["head"]
     else:
         flat.update(packed)
+    return flat
+
+
+def validate_packed(packed: Dict) -> None:
+    """Check every pack entry's structural invariants at pack/load time;
+    raise ``ValueError`` naming the entry and the first violation.
+
+    Position metadata is the pack's wiring diagram: a corrupt byte silently
+    reconstructs weight values into the wrong lanes — finite, plausible, and
+    wrong — which the runtime ``isfinite`` guard cannot see.  Bounds, dtype
+    and shape are checkable *before* serving, so the Engine refuses a pack
+    that fails here (DESIGN.md §9).  The scan runs on device with one scalar
+    sync per entry; the offending index is fetched only on failure."""
+    flat = _flat_entries(packed)
+    if not flat:
+        raise ValueError("empty pack: no entries to serve")
+    for name, e in flat.items():
+        v, q = e["values"], e["positions"]
+        m, a, k, c = e["m"], e["a"], e["k"], e["c"]
+        if tuple(v.shape) != tuple(q.shape):
+            raise ValueError(
+                f"{name}: values shape {tuple(v.shape)} != positions {tuple(q.shape)}"
+            )
+        if q.dtype != jnp.int8:
+            raise ValueError(f"{name}: positions dtype must be int8, got {q.dtype}")
+        if v.ndim not in (3, 4):
+            raise ValueError(f"{name}: expected (T, K, S) or (L, T, K, S), got {tuple(v.shape)}")
+        if m < 1 or a < 1 or m > 128:
+            raise ValueError(f"{name}: window m={m} / slots a={a} out of range (int8 lanes)")
+        if v.shape[-2] != k:
+            raise ValueError(f"{name}: pack rows {v.shape[-2]} != declared k={k}")
+        if v.shape[-1] % a:
+            raise ValueError(f"{name}: slot count {v.shape[-1]} not a multiple of a={a}")
+        if v.shape[-3] * m < c:
+            raise ValueError(
+                f"{name}: {v.shape[-3]} windows of {m} lanes cover "
+                f"{v.shape[-3] * m} < c={c} columns"
+            )
+        # widen before comparing: m=128 does not fit int8, and int8 promotion
+        # would wrap it to -128, flagging every position
+        qw = q.astype(jnp.int32)
+        bad_pos = (qw < -1) | (qw >= m)
+        if bool(bad_pos.any()):
+            qn = np.asarray(q)
+            i = tuple(int(x) for x in np.argwhere(np.asarray(bad_pos))[0])
+            raise ValueError(
+                f"{name}: position {int(qn[i])} at {i} outside [-1, {m}) — corrupt metadata"
+            )
+        if not bool(jnp.isfinite(v).all()):
+            i = tuple(int(x) for x in np.argwhere(~np.isfinite(np.asarray(v)))[0])
+            raise ValueError(f"{name}: non-finite packed value at {i}")
+
+
+def packed_byte_ratios(packed: Dict, value_bytes: Optional[int] = None) -> Dict[str, float]:
+    """Per-weight and total packed/dense HBM byte ratios (int8 positions).
+
+    Accepts both the structured ``pack_lm_weights`` dict and the legacy flat
+    ``pack_lm_mlps`` dict.  ``value_bytes`` defaults to the packed value
+    itemsize."""
+    flat = _flat_entries(packed)
     ratios: Dict[str, float] = {}
     tot_packed = tot_dense = 0
     for name, e in flat.items():

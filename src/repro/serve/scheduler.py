@@ -5,15 +5,16 @@ fixed ``max_new``; real traffic is ragged.  :class:`Scheduler` keeps a fixed
 pool of in-flight *slots* and alternates two phases (DESIGN.md §5, §6):
 
   admission   free slots are filled with queued requests whose arrival time
-              has passed, earliest arrival first.  Arrivals are coalesced
-              per round and grouped into prompt-length buckets: each bucket
-              is primed in ONE batched masked-prefill dispatch
-              (``Engine.prime_many``) and scattered into its slots with ONE
-              donated multi-slot write (``models.cache.write_slots``) —
-              admission of N same-bucket requests costs O(1) dispatches and
-              zero host syncs.  Recurrent families (and
-              ``admission="sequential"``, the measured baseline) fall back
-              to per-request exact-length priming.
+              has passed, highest priority first (arrival order breaks
+              ties).  Arrivals are coalesced per round and grouped into
+              prompt-length buckets: each bucket is primed in ONE batched
+              masked-prefill dispatch (``Engine.prime_many``) and scattered
+              into its slots with ONE donated multi-slot write
+              (``models.cache.write_slots``) — admission of N same-bucket
+              requests costs O(1) dispatches and zero host syncs.
+              Recurrent families (and ``admission="sequential"``, the
+              measured baseline) fall back to per-request exact-length
+              priming.
   decode      one jitted *segment* — ``segment`` fused ``lax.scan`` steps
               of the whole pool, vmapped over the slot axis — runs on
               device, then syncs once; finished slots (EOS or budget)
@@ -40,14 +41,37 @@ tokens.  The segment shape is static — one compiled program serves the
 whole run regardless of arrival pattern, and the bucketed prefill programs
 (one per length bucket x batch bucket) serve any traffic shape without
 recompiling.
+
+Production hardening (DESIGN.md §9) rides the same sync points, so none of
+it adds host transfers:
+
+* **deadlines / cancellation** — ``Request.deadline_s`` is enforced at the
+  segment sync (and at admission: a request whose queue wait already blew
+  its deadline is shed without ever being primed); ``cancel(rid)`` removes
+  queued requests immediately and flags in-flight ones for retirement at
+  the next sync.  Every terminal path lands in ``Completion.status``.
+* **backpressure** — ``queue_cap`` bounds the queue; ``shed_policy``
+  decides who pays: ``"reject"`` the new request, ``"shed-oldest"`` the
+  longest-waiting queued one, or ``"shed-lowest-priority"`` the lowest-
+  priority queued one (only when the newcomer outranks it).
+* **integrity guard + dense fallback** — the engine's per-row ``isfinite``
+  flag is carried through the segment scan and fetched with the token grid
+  in the same ``device_get``.  A slot that trips the guard truncates its
+  tokens at the first bad step; under active packed weights the pack is
+  quarantined (``Engine.quarantine_packed``) and the request is re-admitted
+  ONCE on the dense path — completing as ``FAILED_FALLBACK_OK`` with tokens
+  bit-identical to a clean dense run, since re-admission re-primes from the
+  prompt with the request's own seed.  A second trip fails the request for
+  good: the retry is bounded, never a loop.
 """
 
 from __future__ import annotations
 
 import bisect
 import dataclasses
+import enum
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,20 +79,35 @@ import numpy as np
 
 from .engine import Engine
 
-__all__ = ["Request", "Completion", "Scheduler"]
+__all__ = ["Request", "Completion", "Scheduler", "Status"]
+
+
+class Status(str, enum.Enum):
+    """Terminal state of a request (``Completion.status``)."""
+
+    OK = "OK"
+    TIMEOUT = "TIMEOUT"  # deadline blown — queued (never primed) or in flight
+    CANCELLED = "CANCELLED"
+    REJECTED = "REJECTED"  # backpressure: refused at submit, or shed from the queue
+    FAILED_FALLBACK_OK = "FAILED_FALLBACK_OK"  # guard trip, dense retry delivered
+    FAILED = "FAILED"  # guard trip, bounded retry also tripped
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request.  ``arrival_s`` is an offset from ``run()``
     start (0 = already queued); ``seed`` seeds this request's private PRNG
-    stream, mirroring ``ServeConfig.seed`` in one-shot generate."""
+    stream, mirroring ``ServeConfig.seed`` in one-shot generate.
+    ``deadline_s`` is relative to arrival (None = no deadline); higher
+    ``priority`` admits first and survives ``shed-lowest-priority``."""
 
     prompt: np.ndarray  # (S,) int32
     max_new: int = 32
     eos_id: Optional[int] = None
     seed: int = 0
     arrival_s: float = 0.0
+    deadline_s: Optional[float] = None
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -78,6 +117,8 @@ class Completion:
     arrival_s: float
     admit_s: float
     finish_s: float
+    status: Status = Status.OK
+    ttft_s: float = float("nan")  # time to first token, from arrival
 
     @property
     def latency_s(self) -> float:
@@ -95,10 +136,16 @@ class _Slot:
     eos_id: Optional[int] = None
     arrival_s: float = 0.0
     admit_s: float = 0.0
+    deadline: float = float("inf")  # absolute run-relative deadline
+    ttft_s: float = float("nan")
+    req: Optional[Request] = None  # kept for the bounded dense-retry requeue
 
     @property
     def active(self) -> bool:
         return self.rid >= 0
+
+
+_SHED_POLICIES = ("reject", "shed-oldest", "shed-lowest-priority")
 
 
 class Scheduler:
@@ -110,6 +157,10 @@ class Scheduler:
         slots: int = 4,
         segment: int = 8,
         admission: str = "batched",
+        queue_cap: Optional[int] = None,
+        shed_policy: str = "reject",
+        clock: Optional[Callable[[], float]] = None,
+        sleep: Optional[Callable[[float], None]] = None,
     ):
         if not engine.sc.fused:
             raise ValueError("Scheduler requires a fused-decode engine (ServeConfig.fused)")
@@ -117,6 +168,10 @@ class Scheduler:
             raise ValueError(f"need slots >= 1 and segment >= 1, got {slots}, {segment}")
         if admission not in ("batched", "sequential"):
             raise ValueError(f"admission must be 'batched' or 'sequential', got {admission!r}")
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError(f"queue_cap must be None or >= 1, got {queue_cap}")
+        if shed_policy not in _SHED_POLICIES:
+            raise ValueError(f"shed_policy must be one of {_SHED_POLICIES}, got {shed_policy!r}")
         self.eng = engine
         self.model = engine.model
         self.slots = slots
@@ -125,6 +180,12 @@ class Scheduler:
         # (when the family supports masked prefill); "sequential" keeps the
         # per-request exact-length path as the measured baseline
         self.admission = admission
+        self.queue_cap = queue_cap
+        self.shed_policy = shed_policy
+        # injectable time sources: tests drive deadlines/cancellation with a
+        # fake clock instead of real sleeps, keeping the suite fast and exact
+        self._clock = clock or time.monotonic
+        self._sleep = sleep or time.sleep
         # (arrival_s, rid, Request), kept sorted by (arrival_s, rid) at
         # submit time so arrived requests are always a front prefix —
         # admission pops O(k) per round instead of re-scanning the backlog
@@ -155,25 +216,68 @@ class Scheduler:
                 self._kdata, batch_sharding(engine.mesh, slots, self._kdata.ndim)
             )
         self._batch_axes = self.model.cache_batch_axes(engine.sc.max_len)
-        # donate the pool state: segments and admissions update it in place
+        # donate the pool state: segments and admissions update it in place.
+        # ``dense`` is static: quarantining the pack flips it, forcing the
+        # retrace that rebinds the decode step onto the dense path.
         self._seg = jax.jit(
-            self._segment_fn, static_argnums=(4,), donate_argnums=(1, 2, 3)
+            self._segment_fn, static_argnums=(4, 5), donate_argnums=(1, 2, 3)
         )
         self._write = jax.jit(self._write_fn, donate_argnums=(0, 1, 2))
         self._write_many = jax.jit(self._write_many_fn, donate_argnums=(0, 1, 2))
         self._derive_keys = jax.jit(
             jax.vmap(lambda s: jax.random.key_data(jax.random.key(s)))
         )
+        from ..models.cache import poison_slot
+
+        self._poison = jax.jit(poison_slot, donate_argnums=(0,))
+        # hardening state (reset per run epoch by _maybe_reset)
+        self._cancel: set = set()  # in-flight rids to retire at the next sync
+        self._retried: set = set()  # rids that used their bounded dense retry
+        self._fallback_rids: set = set()  # rids currently on the dense retry
+        self._fault_fired: set = set()  # rids whose one-shot cache fault ran
+        self._counters: Dict[str, int] = dict(
+            rejected=0, shed=0, timed_out=0, cancelled=0,
+            fallback=0, failed=0, quarantined=0,
+        )
+        self._ran = False  # epoch flag: True after run() so the next
+        # submit()/cancel()/run() starts a fresh completion/counter epoch
+        self._run_now: Optional[Callable[[], float]] = None
         # run stats
         self._seg_steps = 0
         self._active_slot_steps = 0
         self._decode_s = 0.0
         self._admit_s = 0.0
 
+    # -- epoch ----------------------------------------------------------------
+
+    def _maybe_reset(self) -> None:
+        """Start a fresh stats/completions epoch on the first mutation after a
+        finished run.  Resetting lazily (instead of at the top of ``run``)
+        lets submit-time rejections land in the same epoch as the run that
+        follows them — the REJECTED completion must survive into the
+        ``run()`` result, not be wiped by it."""
+        if not self._ran:
+            return
+        self._ran = False
+        self._completions = {}
+        self._cancel = set()
+        self._retried = set()
+        self._fallback_rids = set()
+        self._fault_fired = set()
+        for k in self._counters:
+            self._counters[k] = 0
+        self._seg_steps = 0
+        self._active_slot_steps = 0
+        self._decode_s = self._admit_s = 0.0
+
     # -- submission -----------------------------------------------------------
 
     def submit(self, req: Request) -> int:
-        """Queue a request; returns its request id."""
+        """Queue a request; returns its request id.  Under a full queue
+        (``queue_cap``) the shed policy decides who pays: the newcomer is
+        REJECTED, or a queued victim is shed (also REJECTED, counted under
+        ``shed``) to make room."""
+        self._maybe_reset()
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         if req.max_new < 1:  # before the budget check: a negative max_new
             raise ValueError("max_new must be >= 1")  # could slip past it
@@ -186,23 +290,92 @@ class Scheduler:
             )
         rid = self._next_rid
         self._next_rid += 1
-        bisect.insort(
-            self._queue, (req.arrival_s, rid, dataclasses.replace(req, prompt=prompt))
-        )
+        req = dataclasses.replace(req, prompt=prompt)
+        if self.queue_cap is not None and len(self._queue) >= self.queue_cap:
+            if not self._make_room(req):
+                self._finish_unadmitted(rid, req, Status.REJECTED)
+                self._counters["rejected"] += 1
+                return rid
+        bisect.insort(self._queue, (req.arrival_s, rid, req))
         return rid
+
+    def _make_room(self, req: Request) -> bool:
+        """Apply the shed policy to a full queue; True if a slot was freed
+        for ``req``.  ``shed-oldest`` evicts the longest-waiting entry;
+        ``shed-lowest-priority`` evicts the lowest-priority one (latest
+        arrival breaks ties — it would have been served last anyway) and
+        only when the newcomer strictly outranks it, so equal-priority
+        traffic cannot churn the queue."""
+        if self.shed_policy == "reject":
+            return False
+        if self.shed_policy == "shed-oldest":
+            j = 0
+        else:  # shed-lowest-priority
+            j = min(
+                range(len(self._queue)),
+                key=lambda t: (
+                    self._queue[t][2].priority,
+                    -self._queue[t][0],
+                    -self._queue[t][1],
+                ),
+            )
+            if self._queue[j][2].priority >= req.priority:
+                return False
+        _, vrid, vreq = self._queue.pop(j)
+        self._finish_unadmitted(vrid, vreq, Status.REJECTED)
+        self._counters["shed"] += 1
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request: queued requests complete CANCELLED immediately;
+        in-flight ones retire (with their partial tokens) at the next
+        segment sync.  Returns False when ``rid`` is unknown or already
+        terminal — cancellation never raises."""
+        self._maybe_reset()
+        for j, (_, r, req) in enumerate(self._queue):
+            if r == rid:
+                del self._queue[j]
+                now = self._run_now() if self._run_now is not None else float("nan")
+                self._finish_unadmitted(rid, req, Status.CANCELLED, finish=now)
+                self._counters["cancelled"] += 1
+                return True
+        for s in self._slot:
+            if s.active and s.rid == rid:
+                self._cancel.add(rid)
+                return True
+        return False
+
+    def _finish_unadmitted(
+        self, rid: int, req: Request, status: Status, finish: float = float("nan")
+    ) -> None:
+        """Record a terminal completion for a request that never held a slot
+        (rejected / shed / queue-cancelled / deadline-shed).  Timing fields
+        that never happened stay NaN, per the stats convention."""
+        self._completions[rid] = Completion(
+            rid=rid,
+            tokens=np.zeros(0, np.int32),
+            arrival_s=req.arrival_s,
+            admit_s=float("nan"),
+            finish_s=finish,
+            status=status,
+        )
 
     # -- jitted segment body --------------------------------------------------
 
-    def _segment_fn(self, params, token, kdata, cache, steps: int):
+    def _segment_fn(self, params, token, kdata, cache, steps: int, dense: bool):
         """``steps`` decode steps of all slots; returns the emitted token grid
-        ``(steps, slots)`` plus the advanced state.  Each slot splits its own
-        key and samples at batch 1, exactly as one-shot generate does.
+        and per-step integrity flags, both ``(steps, slots)``, plus the
+        advanced state.  Each slot splits its own key and samples at batch
+        1, exactly as one-shot generate does.  ``dense`` (static) forces the
+        dense decode path — flipped by pack quarantine, it keys a retrace so
+        the packed/dense branch rebinds.
 
         Free slots decode along with the pool (their output is discarded and
         their whole state is replaced at the next admission), so the hot
         path carries no per-slot masking — a free slot's ``pos`` merely
         drifts until re-admission, and ``attention_decode`` clamps its cache
         writes at ``max_len``."""
+        decode = self.eng._decode_dense_fn if dense else self.eng._decode_fn
 
         def body(carry, _):
             token, kdata, cache = carry
@@ -210,16 +383,16 @@ class Scheduler:
             def one(tok, kd, c):
                 key = jax.random.wrap_key_data(kd)
                 key, sub = jax.random.split(key)
-                nxt, c2 = self.eng._decode_fn(params, tok, c, sub)
-                return nxt, jax.random.key_data(key), c2
+                nxt, c2, ok = decode(params, tok, c, sub)
+                return nxt, jax.random.key_data(key), c2, ok
 
-            token, kdata, cache = jax.vmap(one)(token, kdata, cache)
-            return (token, kdata, cache), token[:, 0, 0]
+            token, kdata, cache, ok = jax.vmap(one)(token, kdata, cache)
+            return (token, kdata, cache), (token[:, 0, 0], ok[:, 0])
 
-        (token, kdata, cache), toks = jax.lax.scan(
+        (token, kdata, cache), (toks, okg) = jax.lax.scan(
             body, (token, kdata, cache), None, length=steps
         )
-        return token, kdata, cache, toks
+        return token, kdata, cache, toks, okg
 
     # -- admission / retirement ----------------------------------------------
 
@@ -251,13 +424,18 @@ class Scheduler:
         slot.remaining = req.max_new - 1
         slot.arrival_s, slot.admit_s = req.arrival_s, now
         slot.eos_id = req.eos_id
+        slot.deadline = (
+            req.arrival_s + req.deadline_s if req.deadline_s is not None else float("inf")
+        )
+        slot.ttft_s = float("nan")
+        slot.req = req
 
     def _admit(self, i: int, rid: int, req: Request, now: float) -> None:
         """Per-request exact-length admission (recurrent families, and the
         ``admission="sequential"`` baseline): B=1 prime + single-slot write.
         First-token EOS/budget checks are deferred to the segment sync, so
         no device->host transfer happens here."""
-        t0 = time.monotonic()
+        t0 = self._clock()
         key = jax.random.key(req.seed)
         nxt, cache, key = self.eng.prime(req.prompt[None], key)
         self._cache, self._token, self._kdata = self._write(
@@ -265,7 +443,7 @@ class Scheduler:
             jnp.int32(i), cache, nxt, jax.random.key_data(key),
         )
         self._bind_slot(i, rid, req, nxt, now)
-        self._admit_s += time.monotonic() - t0
+        self._admit_s += self._clock() - t0
 
     def _admit_batched(self, free: List[int], picked, now: float) -> None:
         """Coalesced bucketed admission: group this round's arrivals by
@@ -273,7 +451,7 @@ class Scheduler:
         prefill, scatter each into its slots in one donated write.  The
         batch dim is padded to a power of two so compile count stays
         O(len buckets x log2 slots), not O(distinct traffic shapes)."""
-        t0 = time.monotonic()
+        t0 = self._clock()
         groups: Dict[int, list] = {}
         for i, (rid, req) in zip(free, picked):
             groups.setdefault(self.eng.bucket_len(len(req.prompt)), []).append((i, rid, req))
@@ -311,120 +489,225 @@ class Scheduler:
             )
             for j, (i, rid, req) in enumerate(group):
                 self._bind_slot(i, rid, req, nxt[j : j + 1], now)
-        self._admit_s += time.monotonic() - t0
+        self._admit_s += self._clock() - t0
+
+    def _inject_admission_faults(self, free: List[int], picked) -> None:
+        """Apply the seeded fault plan to this admission round: admission
+        stalls (slow-host model) and per-request slot-cache NaN poisoning
+        (``models.cache.poison_slot``).  ``cache_nan_once`` makes a rid's
+        fault fire only on its first admission, so its bounded dense retry
+        runs clean; ``False`` re-fires on the retry, modelling a persistent
+        fault the bounded retry cannot outrun."""
+        f = self.eng.sc.faults
+        if f is None:
+            return
+        t0 = self._clock()
+        for i, (rid, req) in zip(free, picked):
+            if f.wants_stall(rid):
+                self._sleep(f.stall_s)
+            if f.wants_cache_nan(rid) and (
+                not f.cache_nan_once or rid not in self._fault_fired
+            ):
+                self._fault_fired.add(rid)
+                self._cache = self._poison(self._cache, jnp.int32(i))
+        self._admit_s += self._clock() - t0
 
     def _pop_arrived(self, k: int, now: float) -> list:
-        """Take up to ``k`` queued requests whose arrival time has passed,
-        earliest ``arrival_s`` first (submit order breaks ties).  A strict
-        FIFO-by-submit pop would head-of-line block: a free slot would sit
-        idle behind a queue head whose ``arrival_s`` is still in the future
-        even though later-submitted requests have already arrived.  The
-        queue is arrival-sorted, so the arrived set is a front prefix."""
+        """Take up to ``k`` queued requests whose arrival time has passed:
+        highest priority first, earliest arrival breaking ties (a strict
+        FIFO-by-submit pop would head-of-line block behind a queue head
+        whose ``arrival_s`` is still in the future).  The queue is
+        arrival-sorted, so the arrived set is a front prefix.  Requests
+        whose queue wait already blew their deadline are shed here as
+        TIMEOUT — priming a request that cannot finish in time would only
+        steal a slot from one that can."""
         n = 0
-        while n < k and n < len(self._queue) and self._queue[n][0] <= now:
+        while n < len(self._queue) and self._queue[n][0] <= now:
             n += 1
-        picked = [(rid, req) for _, rid, req in self._queue[:n]]
+        arrived, ready = self._queue[:n], []
         del self._queue[:n]
-        return picked
+        for entry in arrived:
+            _, rid, req = entry
+            if req.deadline_s is not None and now > req.arrival_s + req.deadline_s:
+                self._finish_unadmitted(rid, req, Status.TIMEOUT, finish=now)
+                self._counters["timed_out"] += 1
+                continue
+            ready.append(entry)
+        ready.sort(key=lambda e: (-e[2].priority, e[0], e[1]))
+        take, leftover = ready[:k], ready[k:]
+        for e in leftover:  # back into arrival order for the next round
+            bisect.insort(self._queue, e)
+        return [(rid, req) for _, rid, req in take]
 
-    def _retire(self, i: int, now: float) -> Completion:
+    def _retire(self, i: int, now: float, status: Status = Status.OK) -> Completion:
         slot = self._slot[i]
+        if status is Status.OK and slot.rid in self._fallback_rids:
+            status = Status.FAILED_FALLBACK_OK
         done = Completion(
             rid=slot.rid,
             tokens=np.asarray(slot.tokens, np.int32),
             arrival_s=slot.arrival_s,
             admit_s=slot.admit_s,
             finish_s=now,
+            status=status,
+            ttft_s=slot.ttft_s,
         )
         self._completions[slot.rid] = done
+        self._cancel.discard(slot.rid)
         self._slot[i] = _Slot()
         return done
 
+    def _fail_slot(self, i: int, now: float) -> None:
+        """Slot ``i`` tripped the non-finite guard.  Under active packed
+        weights the pack is quarantined (the corrupt bytes may be anywhere
+        in it — DESIGN.md §9) and the whole pool falls back dense.  The
+        request gets ONE re-admission, re-primed from its prompt with its
+        own seed so the retry's tokens are bit-identical to a clean dense
+        run; a second trip is terminal FAILED — never an unbounded loop."""
+        slot = self._slot[i]
+        rid, req = slot.rid, slot.req
+        if self.eng.packed_active and self.eng.quarantine_packed():
+            self._counters["quarantined"] += 1
+        if rid in self._retried:
+            self._counters["failed"] += 1
+            self._retire(i, now, Status.FAILED)
+            return
+        self._retried.add(rid)
+        self._fallback_rids.add(rid)
+        self._counters["fallback"] += 1
+        self._slot[i] = _Slot()  # slot cache is replaced wholesale on re-admission
+        bisect.insort(self._queue, (req.arrival_s, rid, req))
+
     # -- run loop -------------------------------------------------------------
 
-    def run(self, requests: Optional[List[Request]] = None) -> Dict[int, Completion]:
+    def run(
+        self,
+        requests: Optional[List[Request]] = None,
+        on_sync: Optional[Callable[["Scheduler"], None]] = None,
+    ) -> Dict[int, Completion]:
         """Drain the queue (plus ``requests``), honouring arrival times.
-        Returns ``{rid: Completion}``; aggregate numbers via :meth:`stats`."""
+        Returns ``{rid: Completion}`` — every submitted rid appears, whatever
+        its terminal status; aggregate numbers via :meth:`stats`.
+        ``on_sync`` (if given) fires after each segment sync — the hook
+        tests use to cancel in-flight requests or advance an injected
+        clock at a deterministic point."""
+        self._maybe_reset()
         for r in requests or []:
             self.submit(r)
-        self._completions = {}
-        self._seg_steps = 0
-        self._active_slot_steps = 0
-        self._decode_s = self._admit_s = 0.0
-        t_start = time.monotonic()
+        t_start = self._clock()
 
         def now() -> float:
-            return time.monotonic() - t_start
+            return self._clock() - t_start
 
-        while self._queue or any(s.active for s in self._slot):
-            # admission: coalesce this round's arrived requests into free slots
-            t = now()
-            free = [i for i, s in enumerate(self._slot) if not s.active]
-            if free and self._queue:
-                picked = self._pop_arrived(len(free), t)
-                if picked:
-                    if self.admission == "batched" and self.eng.batched_prefill:
-                        self._admit_batched(free[: len(picked)], picked, t)
-                    else:
-                        for i, (rid, req) in zip(free, picked):
-                            self._admit(i, rid, req, t)
-            active_idx = [i for i, s in enumerate(self._slot) if s.active]
-            if not active_idx:
-                if not self._queue:
-                    continue  # drained; loop condition exits
-                # nothing in flight: sleep until the next request arrives
-                # (the queue head, since the queue is arrival-sorted)
-                wait = self._queue[0][0] - now()
-                if wait > 0:
-                    time.sleep(wait)
-                continue
-            # decode one segment and sync once
-            t0 = time.monotonic()
-            self._token, self._kdata, self._cache, toks = self._seg(
-                self.eng.params, self._token, self._kdata, self._cache,
-                self.segment,
-            )
-            toks_np = np.asarray(toks)  # (segment, slots) — the one sync
-            self._decode_s += time.monotonic() - t0
-            self._seg_steps += self.segment
-            self._active_slot_steps += len(active_idx) * self.segment
-            t = now()
-            for i in active_idx:
-                slot = self._slot[i]
-                if slot.first is not None:
-                    # deferred first token: EOS/budget checked here, at the
-                    # segment sync, never in the admission path
-                    first = int(np.asarray(slot.first).reshape(-1)[0])
-                    slot.tokens.append(first)
-                    slot.first = None
-                    if slot.remaining == 0 or (
-                        slot.eos_id is not None and first == slot.eos_id
-                    ):
-                        self._retire(i, t)
+        self._run_now = now
+        try:
+            while self._queue or any(s.active for s in self._slot):
+                # admission: coalesce this round's arrived requests into free slots
+                t = now()
+                free = [i for i, s in enumerate(self._slot) if not s.active]
+                if free and self._queue:
+                    picked = self._pop_arrived(len(free), t)
+                    if picked:
+                        if self.admission == "batched" and self.eng.batched_prefill:
+                            self._admit_batched(free[: len(picked)], picked, t)
+                        else:
+                            for i, (rid, req) in zip(free, picked):
+                                self._admit(i, rid, req, t)
+                        self._inject_admission_faults(free, picked)
+                active_idx = [i for i, s in enumerate(self._slot) if s.active]
+                if not active_idx:
+                    if not self._queue:
+                        continue  # drained; loop condition exits
+                    # nothing in flight: sleep until the next request arrives
+                    # (the queue head, since the queue is arrival-sorted)
+                    wait = self._queue[0][0] - now()
+                    if wait > 0:
+                        self._sleep(wait)
+                    continue
+                # decode one segment and sync once: tokens + integrity flags
+                # come back in the same device_get — the guard costs no
+                # extra host transfer
+                t0 = self._clock()
+                self._token, self._kdata, self._cache, toks, okg = self._seg(
+                    self.eng.params, self._token, self._kdata, self._cache,
+                    self.segment, bool(self.eng.quarantined),
+                )
+                toks_np, ok_np = jax.device_get((toks, okg))  # (segment, slots) x2
+                self._decode_s += self._clock() - t0
+                self._seg_steps += self.segment
+                self._active_slot_steps += len(active_idx) * self.segment
+                t = now()
+                for i in active_idx:
+                    slot = self._slot[i]
+                    if slot.rid in self._cancel:
+                        self._counters["cancelled"] += 1
+                        self._retire(i, t, Status.CANCELLED)
                         continue
-                for tok in toks_np[: min(slot.remaining, self.segment), i]:
-                    slot.tokens.append(int(tok))
-                    slot.remaining -= 1
-                    if (slot.eos_id is not None and tok == slot.eos_id) or slot.remaining == 0:
-                        self._retire(i, t)
-                        break
+                    if slot.first is not None:
+                        # deferred first token: EOS/budget checked here, at the
+                        # segment sync, never in the admission path
+                        first = int(np.asarray(slot.first).reshape(-1)[0])
+                        slot.tokens.append(first)
+                        slot.first = None
+                        slot.ttft_s = t - slot.arrival_s
+                        if slot.remaining == 0 or (
+                            slot.eos_id is not None and first == slot.eos_id
+                        ):
+                            self._retire(i, t)
+                            continue
+                    for step in range(min(slot.remaining, self.segment)):
+                        if not ok_np[step, i]:
+                            # non-finite logits: every token from this step on
+                            # is garbage — truncate and fail the slot
+                            self._fail_slot(i, t)
+                            break
+                        tok = toks_np[step, i]
+                        slot.tokens.append(int(tok))
+                        slot.remaining -= 1
+                        if (slot.eos_id is not None and tok == slot.eos_id) or slot.remaining == 0:
+                            self._retire(i, t)
+                            break
+                    slot = self._slot[i]  # may have retired/failed above
+                    if slot.active and t > slot.deadline:
+                        self._counters["timed_out"] += 1
+                        self._retire(i, t, Status.TIMEOUT)
+                if on_sync is not None:
+                    on_sync(self)
+        finally:
+            self._run_now = None
+        self._ran = True
         return self._completions
 
     def stats(self) -> Dict[str, float]:
-        """Aggregate serve metrics for the most recent :meth:`run`.  Latency
-        percentiles are NaN when nothing completed — an empty run must not
-        read as an infinitely fast one."""
+        """Aggregate serve metrics for the most recent :meth:`run` epoch.
+        Latency/TTFT percentiles are computed over the completions that have
+        the timing (NaN entries — never-admitted or never-emitted requests —
+        are excluded) and are NaN when none do: an empty run must not read
+        as an infinitely fast one.  The counters account every terminal
+        path; ``quarantined`` counts pack-quarantine transitions (0 or 1 per
+        engine lifetime)."""
         done = sorted(self._completions.values(), key=lambda c: c.rid)
-        lat = np.asarray([c.latency_s for c in done])
+        lat = np.asarray([c.latency_s for c in done], np.float64)
+        lat = lat[np.isfinite(lat)]
+        ttft = np.asarray([c.ttft_s for c in done], np.float64)
+        ttft = ttft[np.isfinite(ttft)]
         decoded = sum(max(len(c.tokens) - 1, 0) for c in done)
         busy = self._decode_s + self._admit_s
-        return {
+
+        def pct(a, q):
+            return float(np.percentile(a, q)) if a.size else float("nan")
+
+        out = {
             "requests": len(done),
             "decoded_tokens": decoded,
             "sustained_tok_per_s": decoded / max(busy, 1e-9),
             "decode_s": self._decode_s,
             "admit_s": self._admit_s,
-            "latency_p50_s": float(np.percentile(lat, 50)) if done else float("nan"),
-            "latency_p95_s": float(np.percentile(lat, 95)) if done else float("nan"),
+            "latency_p50_s": pct(lat, 50),
+            "latency_p95_s": pct(lat, 95),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p95_s": pct(ttft, 95),
             "slot_occupancy": self._active_slot_steps / max(self.slots * self._seg_steps, 1),
         }
+        out.update(self._counters)
+        return out

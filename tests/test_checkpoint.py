@@ -1,4 +1,8 @@
-"""Checkpoint subsystem: roundtrip, retention, atomicity, latest-step."""
+"""Checkpoint subsystem: roundtrip, retention, atomicity, latest-step, and
+corruption detection (truncated / bit-flipped leaf files must raise, never
+restore garbage params — DESIGN.md §9)."""
+
+import json
 
 from pathlib import Path
 
@@ -61,3 +65,52 @@ def test_missing_leaf_raises(tmp_path):
     save(tmp_path, 1, {"a": jnp.zeros(3)})
     with pytest.raises(KeyError):
         restore(tmp_path, 1, {"a": jnp.zeros(3), "extra": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# corruption detection
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_leaf_raises(tmp_path):
+    t = _tree()
+    d = save(tmp_path, 1, t)
+    f = d / "leaf_00000.npy"
+    f.write_bytes(f.read_bytes()[:-8])
+    with pytest.raises(ValueError, match="truncated"):
+        restore(tmp_path, 1, jax.tree_util.tree_map(jnp.zeros_like, t))
+
+
+def test_bit_flip_raises(tmp_path):
+    t = _tree()
+    d = save(tmp_path, 1, t)
+    f = d / "leaf_00000.npy"
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0x40  # flip one payload bit: same length, wrong bytes
+    f.write_bytes(bytes(raw))
+    with pytest.raises(ValueError, match="CRC"):
+        restore(tmp_path, 1, jax.tree_util.tree_map(jnp.zeros_like, t))
+
+
+def test_deleted_leaf_file_raises(tmp_path):
+    t = _tree()
+    d = save(tmp_path, 1, t)
+    (d / "leaf_00000.npy").unlink()
+    with pytest.raises(ValueError, match="missing"):
+        restore(tmp_path, 1, jax.tree_util.tree_map(jnp.zeros_like, t))
+
+
+def test_legacy_manifest_without_crc_restores(tmp_path):
+    """Checkpoints written before the CRC field existed must stay readable:
+    strip the integrity keys from the manifest and restore anyway."""
+    t = _tree()
+    d = save(tmp_path, 1, t)
+    mf = d / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    for entry in manifest["leaves"].values():
+        entry.pop("crc32", None)
+        entry.pop("nbytes", None)
+    mf.write_text(json.dumps(manifest))
+    got = restore(tmp_path, 1, jax.tree_util.tree_map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

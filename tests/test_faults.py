@@ -1,0 +1,234 @@
+"""Seeded fault-injection (chaos) suite — DESIGN.md §9.
+
+Load-time guards: ``validate_rows``/``validate_packed`` must refuse packs
+with corrupt position metadata (the corruption class the runtime guard can
+never see).  Runtime guard + graceful degradation: NaN faults injected into
+packed values or slot caches must never produce a ``status=OK`` completion
+with corrupt tokens — affected requests finish ``FAILED_FALLBACK_OK`` with
+tokens bit-identical to a clean dense run (the VUSA property: a dense path
+exists for every packed weight), and the bounded retry never loops."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.packing import pack_rows, validate_rows
+from repro.core.pruning import prune_tree
+from repro.models import build_model
+from repro.serve import (
+    Engine,
+    FaultConfig,
+    Request,
+    Scheduler,
+    ServeConfig,
+    Status,
+)
+from repro.serve.faults import corrupt_pack_positions, corrupt_pack_values
+from repro.serve.packed import pack_lm_weights, validate_packed
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3_2_1b")
+    params = build_model(cfg).init(jax.random.key(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def vusa_pruned():
+    cfg = get_smoke_config("vusa_edge")
+    params = prune_tree(build_model(cfg).init(jax.random.key(0)), 0.85)
+    return cfg, params
+
+
+def _one_shot_dense(cfg, params, req: Request, sc: ServeConfig):
+    """Clean dense reference for a request: the tokens a fallback retry must
+    reproduce bit-for-bit."""
+    dense = dataclasses.replace(sc, packed_weights=False, packed_mlp=False,
+                                faults=None, seed=req.seed)
+    eng = Engine(cfg, params, dense)
+    return eng.generate(np.asarray(req.prompt)[None], max_new=req.max_new)["tokens"][0]
+
+
+def _reqs(n, rng, max_new=8):
+    return [
+        Request(prompt=rng.integers(1, 100, 6).astype(np.int32), max_new=max_new, seed=i)
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# load-time validation
+# ---------------------------------------------------------------------------
+
+
+def test_validate_rows_accepts_clean_pack():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(16, 256)).astype(np.float32)
+    w[rng.random(w.shape) < 0.8] = 0.0
+    validate_rows(pack_rows(w, m=128, a=4))
+
+
+def test_validate_rows_rejects_corruption():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(16, 256)).astype(np.float32)
+    w[rng.random(w.shape) < 0.8] = 0.0
+    p = pack_rows(w, m=128, a=4)
+    q = np.array(p.row_positions)
+    q[0, 0, 0] = -2  # out of [-1, m)
+    with pytest.raises(ValueError, match="outside"):
+        validate_rows(dataclasses.replace(p, row_positions=q))
+    with pytest.raises(ValueError, match="int8"):
+        validate_rows(
+            dataclasses.replace(p, row_positions=p.row_positions.astype(np.int16))
+        )
+    v = np.array(p.values)
+    v[0, 0, 0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        validate_rows(dataclasses.replace(p, values=v))
+
+
+def test_validate_packed_rejects_position_flip(vusa_pruned):
+    cfg, params = vusa_pruned
+    packed = pack_lm_weights(cfg, params, 128, 16, scope="mlp")  # self-validates
+    bad = corrupt_pack_positions(packed, FaultConfig(seed=0, pack_position_flips=1))
+    with pytest.raises(ValueError, match="outside"):
+        validate_packed(bad)
+    # injection is seeded: the same plan corrupts the same byte
+    again = corrupt_pack_positions(packed, FaultConfig(seed=0, pack_position_flips=1))
+    for name in bad["mlp"]:
+        np.testing.assert_array_equal(
+            np.asarray(bad["mlp"][name]["positions"]),
+            np.asarray(again["mlp"][name]["positions"]),
+        )
+
+
+def test_engine_refuses_corrupt_pack(vusa_pruned):
+    """A position bit-flip must make Engine init fail loudly — the pack is
+    never served."""
+    cfg, params = vusa_pruned
+    sc = ServeConfig(
+        max_len=64, packed_mlp=True,
+        faults=FaultConfig(seed=0, pack_position_flips=1),
+    )
+    with pytest.raises(ValueError, match="outside"):
+        Engine(cfg, params, sc)
+
+
+# ---------------------------------------------------------------------------
+# runtime guard + dense fallback (the tentpole acceptance path)
+# ---------------------------------------------------------------------------
+
+
+def test_packed_value_nan_quarantines_and_falls_back_dense(vusa_pruned):
+    """NaN corruption in packed values (post-load, so only the runtime guard
+    can see it): every affected request must finish FAILED_FALLBACK_OK with
+    tokens bit-identical to a clean dense run, the pack must be quarantined,
+    and no completion may read OK with corrupt tokens."""
+    cfg, params = vusa_pruned
+    sc = ServeConfig(
+        max_len=64, packed_mlp=True, faults=FaultConfig(seed=0, pack_value_nans=2)
+    )
+    eng = Engine(cfg, params, sc)
+    assert eng.packed_active
+    sched = Scheduler(eng, slots=3, segment=4)
+    rng = np.random.default_rng(2)
+    reqs = _reqs(3, rng)
+    done = sched.run(reqs)
+    assert eng.quarantined and not eng.packed_active
+    assert set(done) == {0, 1, 2}
+    for rid, c in done.items():
+        assert c.status is Status.FAILED_FALLBACK_OK, (rid, c.status)
+        np.testing.assert_array_equal(
+            c.tokens, _one_shot_dense(cfg, params, reqs[rid], sc), err_msg=f"rid {rid}"
+        )
+    st = sched.stats()
+    assert st["fallback"] == 3 and st["quarantined"] == 1 and st["failed"] == 0
+
+
+def test_cache_poison_falls_back_without_quarantine(llama):
+    """A transient slot-cache NaN on a dense engine: the afflicted request
+    retries once (clean) and finishes FAILED_FALLBACK_OK bit-identical to
+    its clean run; neighbours are untouched; nothing is quarantined."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=64, faults=FaultConfig(cache_nan_rids=(1,)))
+    eng = Engine(cfg, params, sc)
+    sched = Scheduler(eng, slots=2, segment=4)
+    rng = np.random.default_rng(3)
+    reqs = _reqs(3, rng)
+    done = sched.run(reqs)
+    assert not eng.quarantined
+    assert done[1].status is Status.FAILED_FALLBACK_OK
+    for rid in (0, 2):
+        assert done[rid].status is Status.OK
+    for rid, c in done.items():
+        np.testing.assert_array_equal(
+            c.tokens, _one_shot_dense(cfg, params, reqs[rid], sc), err_msg=f"rid {rid}"
+        )
+    st = sched.stats()
+    assert st["fallback"] == 1 and st["quarantined"] == 0 and st["failed"] == 0
+
+
+def test_persistent_cache_fault_bounded_retry(llama):
+    """``cache_nan_once=False`` re-poisons the retry: the request must fail
+    terminally (FAILED) after exactly one retry — bounded, never a loop —
+    and neighbours still finish bit-identical."""
+    cfg, params = llama
+    sc = ServeConfig(
+        max_len=64, faults=FaultConfig(cache_nan_rids=(1,), cache_nan_once=False)
+    )
+    sched = Scheduler(Engine(cfg, params, sc), slots=2, segment=4)
+    rng = np.random.default_rng(4)
+    reqs = _reqs(3, rng)
+    done = sched.run(reqs)
+    assert done[1].status is Status.FAILED
+    for rid in (0, 2):
+        assert done[rid].status is Status.OK
+        np.testing.assert_array_equal(
+            done[rid].tokens, _one_shot_dense(cfg, params, reqs[rid], sc)
+        )
+    st = sched.stats()
+    assert st["fallback"] == 1 and st["failed"] == 1
+
+
+def test_admission_stall_injection(llama):
+    """Seeded admission stalls land in the admit-time accounting (and the
+    run still completes correctly)."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=64, faults=FaultConfig(stall_s=0.05, stall_rids=(0,)))
+    sched = Scheduler(Engine(cfg, params, sc), slots=2, segment=4)
+    rng = np.random.default_rng(5)
+    reqs = _reqs(2, rng)
+    done = sched.run(reqs)
+    assert all(c.status is Status.OK for c in done.values())
+    assert sched.stats()["admit_s"] >= 0.05
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_sweep_no_corrupt_ok(llama, seed):
+    """Full sweep: at a 30% seeded cache-fault rate, every completion is
+    either OK or FAILED_FALLBACK_OK and every delivered token sequence is
+    bit-identical to the clean run — no injected fault ever yields corrupt
+    tokens under an OK-ish status."""
+    cfg, params = llama
+    sc = ServeConfig(
+        max_len=64, faults=FaultConfig(seed=seed, cache_nan_rate=0.3)
+    )
+    sched = Scheduler(Engine(cfg, params, sc), slots=4, segment=4)
+    rng = np.random.default_rng(seed)
+    reqs = _reqs(8, rng)
+    done = sched.run(reqs)
+    assert set(done) == set(range(8))
+    n_fallback = 0
+    for rid, c in done.items():
+        assert c.status in (Status.OK, Status.FAILED_FALLBACK_OK), (rid, c.status)
+        n_fallback += c.status is Status.FAILED_FALLBACK_OK
+        np.testing.assert_array_equal(
+            c.tokens, _one_shot_dense(cfg, params, reqs[rid], sc), err_msg=f"rid {rid}"
+        )
+    assert sched.stats()["fallback"] == n_fallback

@@ -1,0 +1,295 @@
+"""Serve-stack hardening: deadlines, cancellation, backpressure shed
+policies, priority admission, the stats counters/TTFT satellite, and prompt
+token-id validation.  Differential style throughout: every path that touches
+one request must leave its neighbours' tokens bit-identical to a clean run."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import Engine, Request, Scheduler, ServeConfig, Status
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3_2_1b")
+    params = build_model(cfg).init(jax.random.key(0))
+    return cfg, params
+
+
+def _one_shot(cfg, params, req: Request, sc: ServeConfig):
+    eng = Engine(cfg, params, dataclasses.replace(sc, seed=req.seed))
+    return eng.generate(np.asarray(req.prompt)[None], max_new=req.max_new)["tokens"][0]
+
+
+def _req(rng, seed, max_new=8, **kw):
+    return Request(
+        prompt=rng.integers(1, 100, 6).astype(np.int32), max_new=max_new, seed=seed, **kw
+    )
+
+
+class FakeClock:
+    """Injectable monotonic clock: deadlines fire exactly when a test says,
+    not when the wall clock happens to."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, s: float) -> None:
+        self.t += s
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_sheds_before_admission(llama):
+    """A request whose queue wait already blew its deadline is shed at
+    admission (TIMEOUT, no tokens, never primed); its neighbour's tokens
+    stay bit-identical to a clean run."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=2, segment=4)
+    rng = np.random.default_rng(0)
+    reqs = [_req(rng, 0), _req(rng, 1, deadline_s=0.0)]
+    done = sched.run(reqs)
+    assert done[1].status is Status.TIMEOUT and len(done[1].tokens) == 0
+    assert np.isnan(done[1].admit_s)  # never held a slot
+    assert done[0].status is Status.OK
+    np.testing.assert_array_equal(done[0].tokens, _one_shot(cfg, params, reqs[0], sc))
+    st = sched.stats()
+    assert st["timed_out"] == 1 and st["requests"] == 2
+
+
+def test_deadline_in_flight_timeout(llama):
+    """An in-flight request whose deadline passes mid-decode retires TIMEOUT
+    at the segment sync with its partial tokens — a prefix of the clean
+    run's tokens — while an undeadlined neighbour is untouched."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=96)
+    clk = FakeClock()
+    sched = Scheduler(
+        Engine(cfg, params, dataclasses.replace(sc)),
+        slots=2, segment=4, clock=clk, sleep=clk.sleep,
+    )
+    rng = np.random.default_rng(1)
+    reqs = [_req(rng, 0, max_new=24), _req(rng, 1, max_new=24, deadline_s=5.0)]
+
+    def advance(s):  # fires after each sync: second sync sees t > 5
+        clk.t += 10.0
+
+    done = sched.run(reqs, on_sync=advance)
+    one1 = _one_shot(cfg, params, reqs[1], sc)
+    assert done[1].status is Status.TIMEOUT
+    assert 0 < len(done[1].tokens) < 24
+    np.testing.assert_array_equal(done[1].tokens, one1[: len(done[1].tokens)])
+    assert done[0].status is Status.OK
+    np.testing.assert_array_equal(done[0].tokens, _one_shot(cfg, params, reqs[0], sc))
+    assert sched.stats()["timed_out"] == 1
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_queued(llama):
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=1, segment=4)
+    rng = np.random.default_rng(2)
+    reqs = [_req(rng, 0), _req(rng, 1)]
+    for r in reqs:
+        sched.submit(r)
+    assert sched.cancel(1) is True
+    assert sched.cancel(99) is False  # unknown rid never raises
+    done = sched.run()
+    assert done[1].status is Status.CANCELLED and len(done[1].tokens) == 0
+    np.testing.assert_array_equal(done[0].tokens, _one_shot(cfg, params, reqs[0], sc))
+    assert sched.stats()["cancelled"] == 1
+
+
+def test_cancel_in_flight(llama):
+    """Cancelling an in-flight request retires it at the next sync with the
+    tokens it had (a prefix of its clean run); the surviving slot's tokens
+    stay bit-identical."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=96)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=2, segment=4)
+    rng = np.random.default_rng(3)
+    reqs = [_req(rng, 0, max_new=24), _req(rng, 1, max_new=24)]
+    fired = []
+
+    def hook(s):
+        if not fired:
+            fired.append(True)
+            assert s.cancel(1) is True
+
+    done = sched.run(reqs, on_sync=hook)
+    assert done[1].status is Status.CANCELLED
+    assert 0 < len(done[1].tokens) < 24
+    np.testing.assert_array_equal(
+        done[1].tokens, _one_shot(cfg, params, reqs[1], sc)[: len(done[1].tokens)]
+    )
+    assert done[0].status is Status.OK
+    np.testing.assert_array_equal(done[0].tokens, _one_shot(cfg, params, reqs[0], sc))
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_reject(llama):
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(
+        Engine(cfg, params, dataclasses.replace(sc)), slots=1, segment=4, queue_cap=2
+    )
+    rng = np.random.default_rng(4)
+    reqs = [_req(rng, i) for i in range(3)]
+    rids = [sched.submit(r) for r in reqs]
+    done = sched.run()
+    assert done[rids[2]].status is Status.REJECTED and len(done[rids[2]].tokens) == 0
+    for rid in rids[:2]:
+        np.testing.assert_array_equal(
+            done[rid].tokens, _one_shot(cfg, params, reqs[rid], sc)
+        )
+    st = sched.stats()
+    assert st["rejected"] == 1 and st["shed"] == 0
+
+
+def test_backpressure_shed_oldest(llama):
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(
+        Engine(cfg, params, dataclasses.replace(sc)),
+        slots=1, segment=4, queue_cap=2, shed_policy="shed-oldest",
+    )
+    rng = np.random.default_rng(5)
+    reqs = [_req(rng, i) for i in range(3)]
+    rids = [sched.submit(r) for r in reqs]
+    done = sched.run()
+    # the longest-waiting request paid; the newcomer got its place
+    assert done[rids[0]].status is Status.REJECTED
+    for rid in rids[1:]:
+        assert done[rid].status is Status.OK
+        np.testing.assert_array_equal(
+            done[rid].tokens, _one_shot(cfg, params, reqs[rid], sc)
+        )
+    assert sched.stats()["shed"] == 1
+
+
+def test_backpressure_shed_lowest_priority(llama):
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(
+        Engine(cfg, params, dataclasses.replace(sc)),
+        slots=1, segment=4, queue_cap=2, shed_policy="shed-lowest-priority",
+    )
+    rng = np.random.default_rng(6)
+    r_hi = _req(rng, 0, priority=5)
+    r_lo = _req(rng, 1, priority=1)
+    r_mid = _req(rng, 2, priority=3)  # outranks r_lo: evicts it
+    r_floor = _req(rng, 3, priority=0)  # outranks nobody: rejected itself
+    rids = [sched.submit(r) for r in (r_hi, r_lo, r_mid, r_floor)]
+    done = sched.run()
+    assert done[rids[1]].status is Status.REJECTED  # shed victim
+    assert done[rids[3]].status is Status.REJECTED  # rejected newcomer
+    assert done[rids[0]].status is Status.OK and done[rids[2]].status is Status.OK
+    st = sched.stats()
+    assert st["shed"] == 1 and st["rejected"] == 1
+
+
+def test_priority_admission_order(llama):
+    """With one slot and both requests queued, the higher-priority one is
+    admitted first even though it was submitted second."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=1, segment=4)
+    rng = np.random.default_rng(7)
+    reqs = [_req(rng, 0, priority=0), _req(rng, 1, priority=9)]
+    done = sched.run(reqs)
+    assert done[1].finish_s <= done[0].admit_s
+    for rid in (0, 1):
+        np.testing.assert_array_equal(
+            done[rid].tokens, _one_shot(cfg, params, reqs[rid], sc)
+        )
+
+
+# ---------------------------------------------------------------------------
+# stats counters + TTFT (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_stats_counters_and_ttft(llama):
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)), slots=2, segment=4)
+    # empty epoch: percentiles NaN (not an infinitely fast server), counters 0
+    st = sched.stats()
+    for k in ("latency_p50_s", "latency_p95_s", "ttft_p50_s", "ttft_p95_s"):
+        assert np.isnan(st[k])
+    for k in ("rejected", "shed", "timed_out", "cancelled", "fallback", "failed",
+              "quarantined"):
+        assert st[k] == 0
+    rng = np.random.default_rng(8)
+    done = sched.run([_req(rng, i) for i in range(3)])
+    st = sched.stats()
+    assert st["requests"] == 3
+    assert np.isfinite(st["ttft_p50_s"]) and st["ttft_p50_s"] >= 0
+    assert st["ttft_p95_s"] >= st["ttft_p50_s"] - 1e-12
+    assert all(np.isfinite(c.ttft_s) and c.ttft_s <= c.latency_s for c in done.values())
+
+
+def test_epoch_reset_on_next_submit(llama):
+    """A second run starts a fresh completions/counters epoch, but a
+    submit-time rejection before that run survives into its results."""
+    cfg, params = llama
+    sc = ServeConfig(max_len=64)
+    sched = Scheduler(
+        Engine(cfg, params, dataclasses.replace(sc)), slots=1, segment=4, queue_cap=1
+    )
+    rng = np.random.default_rng(9)
+    done1 = sched.run([_req(rng, 0)])
+    assert set(done1) == {0}
+    r1, r2 = _req(rng, 1), _req(rng, 2)
+    rid1, rid2 = sched.submit(r1), sched.submit(r2)  # cap=1: rid2 rejected
+    done2 = sched.run()
+    assert set(done2) == {rid1, rid2}  # epoch reset dropped rid 0
+    assert done2[rid2].status is Status.REJECTED
+    assert sched.stats()["rejected"] == 1
+
+
+# ---------------------------------------------------------------------------
+# prompt token-id validation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_generate_rejects_out_of_range_token_ids(llama):
+    """Negative or >= vocab ids would silently wrap/clamp through the
+    embedding gather — generate/prime must refuse them, naming the
+    position."""
+    cfg, params = llama
+    eng = Engine(cfg, params, ServeConfig(max_len=64))
+    bad_neg = np.array([[1, 2, -7, 3]], np.int32)
+    with pytest.raises(ValueError, match=r"-7.*\(0, 2\)"):
+        eng.generate(bad_neg, max_new=2)
+    bad_big = np.array([[1, 2, 3, cfg.vocab]], np.int32)
+    with pytest.raises(ValueError, match=r"\(0, 3\)"):
+        eng.generate(bad_big, max_new=2)
+    with pytest.raises(ValueError, match="vocab"):
+        eng.prime_many(np.array([[1, cfg.vocab + 5]], np.int32), np.array([2], np.int32))
+    # boundary ids are fine
+    ok = np.array([[0, cfg.vocab - 1]], np.int32)
+    out = eng.generate(ok, max_new=2)
+    assert out["tokens"].shape == (1, 2) and out["finite"]
