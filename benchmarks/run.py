@@ -272,6 +272,24 @@ def kernel_vusa_packed():
             "byte_ratio": p.byte_ratio,
             "n_jobs": int(p.values.shape[2] // p.a),
         }
+        if sp == 0.0:
+            # N:M structured comparison arm (S2TA-style density-bound blocks):
+            # 2:4 prunes the dense matrix itself, then rides the same kernel
+            from repro.core.packing import nm_mask
+            from repro.kernels.ops import pack_linear_rows_nm
+
+            pnm = pack_linear_rows_nm(w, n=2, block=4, a=16)
+            masked = np.where(nm_mask(w, 2, 4), w, 0.0)
+            got = np.asarray(apply_row_packed(x, pnm), np.float32)
+            np.testing.assert_allclose(
+                got, np.asarray(x, np.float32) @ masked, rtol=1e-4, atol=1e-4
+            )
+            f_nm = jax.jit(lambda a: apply_row_packed(a, pnm))
+            results["nm_2of4"] = {
+                "byte_ratio": pnm.byte_ratio,
+                "n_jobs": int(pnm.values.shape[2] // pnm.a),
+                "kernel_vec_us": best_of(f_nm) * 1e6,
+            }
         if sp in (0.85, 0.95):  # wall-time A/B on the interesting points
             ref = np.asarray(vusa_packed_ref(x, p.values, p.positions))[:, : p.c]
             got = np.asarray(apply_row_packed(x, p), np.float32)
@@ -375,6 +393,14 @@ def bench_packed_decode():
         ),
         "fused": Engine(cfg, params, ServeConfig(max_len=128, packed_weights="mlp")),
         "whole": Engine(cfg, params, ServeConfig(max_len=128, packed_weights="all")),
+        "int8": Engine(
+            cfg, params,
+            ServeConfig(max_len=128, packed_weights="all", packed_values="int8"),
+        ),
+        "int4": Engine(
+            cfg, params,
+            ServeConfig(max_len=128, packed_weights="all", packed_values="int4"),
+        ),
     }
     # tune the fused shape before the engines trace: apply_fused_mlp consults
     # the autotune cache at trace time, so the winner reaches the megakernel
@@ -396,7 +422,43 @@ def bench_packed_decode():
     toks = {}
     for name, eng in engines.items():  # compile + parity check
         toks[name] = eng.generate(prompts, max_new=max_new)["tokens"]
+        if name in ("int8", "int4"):
+            continue  # quantized arms gate against the qdq oracle below
         assert (toks[name] == toks["dense"]).all(), f"{name} decode diverged from dense"
+    # int8 correctness bar (DESIGN.md §10): greedy tokens bit-exact vs a
+    # dense engine running on quantize-dequantize'd weights.  int4 is gated
+    # on same-cache decode-step logits instead: the oracle *prefills* on qdq
+    # weights while the packed engine prefills dense, so near-tie argmaxes
+    # may flip a token without any kernel error.
+    from repro.serve.packed import lm_decode_step_packed, qdq_lm_params
+
+    oracle8 = Engine(cfg, qdq_lm_params(cfg, params, value_dtype="int8"),
+                     ServeConfig(max_len=128))
+    otoks = oracle8.generate(prompts, max_new=max_new)["tokens"]
+    assert (toks["int8"] == otoks).all(), "int8 decode diverged from qdq-dense oracle"
+    # same-cache decode step: prefill is dense in every packed arm, so one
+    # prime supplies the shared cache; quantized logits must stay within the
+    # quantization error of the bf16-pack logits and within accumulation
+    # noise of their own qdq-dense step
+    nxt, cache, _ = engines["whole"].prime(prompts, jax.random.key(0))
+    step_logits = {}
+    for name in ("whole", "int8", "int4"):
+        lg, _ = lm_decode_step_packed(
+            engines[name].params, engines[name]._packed, nxt, cache, cfg
+        )
+        step_logits[name] = np.asarray(lg, np.float32)
+    for dt in ("int8", "int4"):
+        qdq = qdq_lm_params(cfg, params, value_dtype=dt)
+        lg, _ = engines["dense"].model.decode_step(qdq, nxt, cache)
+        np.testing.assert_allclose(
+            step_logits[dt], np.asarray(lg, np.float32), rtol=1e-4, atol=1e-4,
+            err_msg=f"{dt} kernel dequant diverged from its qdq-dense step",
+        )
+        span = float(np.abs(step_logits["whole"]).max())
+        err = float(np.abs(step_logits[dt] - step_logits["whole"]).max())
+        assert err <= 0.35 * max(span, 1.0), (
+            f"{dt} logits drifted {err:.3f} from bf16 pack (span {span:.3f})"
+        )
     best = {n: 0.0 for n in engines}
     for _ in range(6):  # interleave trials so noise hits every arm alike
         for name, eng in engines.items():
@@ -405,14 +467,22 @@ def bench_packed_decode():
     fused_speedup = best["fused"] / best["split3"]
     whole_vs_mlp = best["whole"] / best["fused"]
     ratios = packed_byte_ratios(engines["whole"]._packed)
+    qratios = {dt: packed_byte_ratios(engines[dt]._packed) for dt in ("int8", "int4")}
+    # §10 HBM budget at 85% sparsity: quantized packs must beat these totals
+    assert qratios["int8"]["total"] <= 0.18, qratios["int8"]
+    assert qratios["int4"]["total"] <= 0.15, qratios["int4"]
     _save("bench_packed_decode", {
         "split3_tok_per_s": best["split3"],
         "fused_tok_per_s": best["fused"],
         "whole_tok_per_s": best["whole"],
         "dense_tok_per_s": best["dense"],
+        "int8_tok_per_s": best["int8"],
+        "int4_tok_per_s": best["int4"],
         "fused_speedup": fused_speedup,
         "whole_vs_mlp": whole_vs_mlp,
         "byte_ratio_total": ratios["total"],
+        "byte_ratio_int8": qratios["int8"]["total"],
+        "byte_ratio_int4": qratios["int4"]["total"],
         "byte_ratios": ratios,
         "fused_k_blk": k_blk,
         "batch": int(prompts.shape[0]),
@@ -420,8 +490,11 @@ def bench_packed_decode():
     })
     _emit("bench_packed_decode", 1e6 / max(best["fused"], 1e-9),
           f"split3_tok_s={best['split3']:.0f};fused_tok_s={best['fused']:.0f};"
-          f"whole_tok_s={best['whole']:.0f};fused_speedup={fused_speedup:.2f}x;"
-          f"whole_vs_mlp={whole_vs_mlp:.2f}x;bytes={ratios['total']:.3f}")
+          f"whole_tok_s={best['whole']:.0f};int8_tok_s={best['int8']:.0f};"
+          f"int4_tok_s={best['int4']:.0f};fused_speedup={fused_speedup:.2f}x;"
+          f"whole_vs_mlp={whole_vs_mlp:.2f}x;bytes={ratios['total']:.3f};"
+          f"bytes_int8={qratios['int8']['total']:.3f};"
+          f"bytes_int4={qratios['int4']['total']:.3f}")
 
 
 def bench_continuous_batching():
@@ -889,7 +962,13 @@ BENCHES = {
 BASELINE_METRICS = {
     "bench_decode_fused": ["fused_tok_per_s", "speedup"],
     "kernel_vusa_packed": ["sparsity_0.85/kernel_speedup"],
-    "bench_packed_decode": ["fused_tok_per_s", "fused_speedup", "whole_tok_per_s"],
+    # the quantized arms' tok/s floors sit beside the bf16 whole-model floor:
+    # fused dequant must not cost the packed path its throughput (correctness
+    # and byte ratios are asserted inside the bench itself)
+    "bench_packed_decode": [
+        "fused_tok_per_s", "fused_speedup", "whole_tok_per_s",
+        "int8_tok_per_s", "int4_tok_per_s",
+    ],
     "bench_continuous_batching": ["sched_tok_per_s", "speedup_vs_oneshot"],
     "bench_admission": ["batched_tok_per_s", "speedup_vs_sequential"],
     # sharded decode on 8 forced CPU devices: collectives are pure overhead
@@ -922,35 +1001,91 @@ def write_baseline(path: str) -> None:
     print(f"wrote baseline for {list(base)} to {path}")
 
 
+GATE_ROWS = []  # (bench, metric, baseline, fresh, status) — for --summary-md
+
+
 def check_against(path: str, tolerance: float) -> bool:
     """Compare the benches that just ran against a committed baseline.
     A metric regresses when fresh < baseline * (1 - tolerance).  Returns
     True when everything held."""
     base = json.loads(Path(path).read_text())
     ok = True
+    GATE_ROWS.clear()
     for name, metrics in base.items():
         if name not in RESULTS:
             # a gated bench that silently stops running is itself a
             # regression — the gate must not go green while blind
             print(f"gate: {name} MISSING (baseline-gated but not run)")
+            GATE_ROWS.append((name, "*", None, None, "MISSING"))
             ok = False
             continue
         for metric, ref in metrics.items():
-            fresh = _lookup(RESULTS[name], metric)
+            try:
+                fresh = _lookup(RESULTS[name], metric)
+            except (KeyError, TypeError):
+                # the bench ran but no longer reports a gated metric — name
+                # it instead of crashing (or silently passing): a metric the
+                # baseline protects must exist in every fresh run
+                print(f"gate: {name}.{metric} MISSING (gated metric absent "
+                      f"from the fresh {name} results)")
+                GATE_ROWS.append((name, metric, ref, None, "MISSING"))
+                ok = False
+                continue
             floor = ref * (1.0 - tolerance)
             status = "ok" if fresh >= floor else "REGRESSION"
             if fresh < floor:
                 ok = False
             print(f"gate: {name}.{metric} = {fresh:.3f} vs baseline {ref:.3f}"
                   f" (floor {floor:.3f}) {status}")
-    # inverse check: a bench that ran and is declared gated must be in the
-    # baseline file, else a newly added metric silently goes unprotected
-    for name in BASELINE_METRICS:
-        if name in RESULTS and name not in base:
+            GATE_ROWS.append((name, metric, ref, fresh, status))
+    # inverse check: every declared gated metric of a bench that ran must be
+    # in the baseline file, else newly added metrics silently go unprotected
+    for name, metrics in BASELINE_METRICS.items():
+        if name not in RESULTS:
+            continue
+        if name not in base:
             print(f"gate: {name} UNGATED (ran, declared in BASELINE_METRICS, "
                   f"but absent from {path} — regenerate with --write-baseline)")
+            GATE_ROWS.append((name, "*", None, None, "UNGATED"))
             ok = False
+            continue
+        for metric in metrics:
+            if metric not in base[name]:
+                print(f"gate: {name}.{metric} UNGATED (declared in "
+                      f"BASELINE_METRICS but absent from {path} — "
+                      f"regenerate with --write-baseline)")
+                GATE_ROWS.append((name, metric, None, None, "UNGATED"))
+                ok = False
     return ok
+
+
+def write_summary_md(path: str) -> None:
+    """Render the gate comparison as a GitHub-flavored markdown table —
+    CI cats this into ``$GITHUB_STEP_SUMMARY`` so the fresh-vs-baseline
+    numbers are readable on the job page without digging through logs."""
+
+    def fmt(v):
+        return "—" if v is None else f"{v:.3f}"
+
+    lines = [
+        "### Bench gate: fresh vs committed baseline",
+        "",
+        "| bench | metric | baseline | fresh | delta | status |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    for name, metric, ref, fresh, status in GATE_ROWS:
+        delta = (
+            f"{(fresh - ref) / ref * 100:+.1f}%"
+            if ref not in (None, 0) and fresh is not None else "—"
+        )
+        mark = {"ok": "✅", "REGRESSION": "❌", "MISSING": "❌", "UNGATED": "❌"}[status]
+        lines.append(
+            f"| {name} | {metric} | {fmt(ref)} | {fmt(fresh)} | {delta} | {mark} {status} |"
+        )
+    if not GATE_ROWS:
+        lines.append("| _no gated benches ran_ | | | | | |")
+    Path(path).write_text("\n".join(lines) + "\n")
+    print(f"wrote gate summary to {path}")
 
 
 def main(argv=None) -> None:
@@ -970,6 +1105,9 @@ def main(argv=None) -> None:
                     help="allowed fractional regression (default 0.25)")
     ap.add_argument("--write-baseline", metavar="FILE",
                     help="write a fresh baseline JSON after the run")
+    ap.add_argument("--summary-md", metavar="FILE",
+                    help="with --check-against: also write the gate table as "
+                    "markdown (for $GITHUB_STEP_SUMMARY)")
     args = ap.parse_args(argv)
     names = args.names or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
@@ -980,8 +1118,14 @@ def main(argv=None) -> None:
         BENCHES[n]()
     if args.write_baseline:
         write_baseline(args.write_baseline)
-    if args.check_against and not check_against(args.check_against, args.tolerance):
-        sys.exit(1)
+    if args.check_against:
+        held = check_against(args.check_against, args.tolerance)
+        if args.summary_md:
+            # write the table even on failure — the job summary is most
+            # valuable exactly when the gate trips
+            write_summary_md(args.summary_md)
+        if not held:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

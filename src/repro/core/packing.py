@@ -27,6 +27,9 @@ __all__ = [
     "BlockPacked", "pack_blocks", "unpack_blocks",
     "RowPacked", "pack_rows", "pack_rows_t", "unpack_rows", "shard_windows",
     "validate_rows",
+    "QUANT_DTYPES", "QMAX", "QuantizedRowPacked",
+    "quantize_rows", "dequantize_rows", "pack_nibbles", "unpack_nibbles",
+    "nm_mask", "pack_rows_nm",
 ]
 
 
@@ -332,3 +335,150 @@ def unpack_rows(p: RowPacked) -> np.ndarray:
                 if pos >= 0:
                     w[r, ti * p.m + pos] += p.values[ti, r, s]
     return w[:, : p.c]
+
+
+# --------------------------------------------------------------------------
+# Quantized row-wise pack: int8 / int4-nibble values + per-window fp32 scales
+# --------------------------------------------------------------------------
+
+QUANT_DTYPES = ("int8", "int4")
+QMAX = {"int8": 127, "int4": 7}
+
+
+@dataclasses.dataclass
+class QuantizedRowPacked:
+    """Row-wise VUSA pack with integer-quantized value slots (DESIGN.md §10).
+
+    values:    (T, K, S) int8 for ``int8``; (T, K, S//2) int8 for ``int4``
+               (two slots per byte: slot 2i in the low nibble, 2i+1 high)
+    positions: (T, K, S) int8  lane index within window (-1 = idle) —
+               always full-resolution regardless of value dtype
+    scales:    (T, K) float32  per-(window, row) dequant scale; all-zero
+               rows carry scale 1.0 so dequant stays finite
+    dense_itemsize: bytes per element of the *original* dense matrix — the
+               honest denominator for byte-ratio accounting (quantization
+               changes the pack's bytes, not the dense baseline it replaces)
+    """
+
+    k: int
+    c: int
+    m: int
+    a: int
+    value_dtype: str
+    values: np.ndarray
+    row_positions: np.ndarray
+    scales: np.ndarray
+    dense_itemsize: int
+
+    @property
+    def slots(self) -> int:
+        return self.row_positions.shape[2]
+
+    @property
+    def n_jobs(self) -> int:
+        return self.slots // self.a
+
+
+def pack_nibbles(q: np.ndarray) -> np.ndarray:
+    """Pack int4-range int8 values (..., S) into (..., S//2) bytes, S even.
+
+    Slot ``2i`` lands in the low nibble, ``2i+1`` in the high nibble, so the
+    kernel's shift/mask decode walks slots in order."""
+    if q.shape[-1] % 2:
+        raise ValueError(f"slot count {q.shape[-1]} must be even to nibble-pack")
+    u = q.astype(np.uint8)
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return (((hi & 0xF) << 4) | (lo & 0xF)).astype(np.int8)
+
+
+def unpack_nibbles(b: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_nibbles`: (..., S//2) bytes -> (..., S) int8.
+
+    ``(b << 4) >> 4`` sign-extends the low nibble, ``b >> 4`` the high one
+    (int8 arithmetic shifts) — the same decode the kernel does in VMEM."""
+    b = b.astype(np.int8)
+    lo = ((b << 4) >> 4).astype(np.int8)
+    hi = (b >> 4).astype(np.int8)
+    out = np.empty(b.shape[:-1] + (b.shape[-1] * 2,), dtype=np.int8)
+    out[..., 0::2] = lo
+    out[..., 1::2] = hi
+    return out
+
+
+def quantize_rows(p: RowPacked, value_dtype: str) -> QuantizedRowPacked:
+    """Quantize a :class:`RowPacked`'s value slots to ``int8`` or ``int4``.
+
+    Symmetric per-(window, row) scaling: scale = amax / qmax over the row's
+    slots within the window, q = clip(round(v / scale)).  For ``int4`` the
+    slot axis is first padded to even (value 0, position -1 — an exact idle
+    slot) and then nibble-packed two slots per byte."""
+    if value_dtype not in QUANT_DTYPES:
+        raise ValueError(f"value_dtype must be one of {QUANT_DTYPES}, got {value_dtype!r}")
+    qmax = QMAX[value_dtype]
+    vals = np.asarray(p.values, dtype=np.float32)
+    positions = np.asarray(p.row_positions)
+    amax = np.abs(vals).max(axis=2)
+    scales = np.where(amax > 0, amax / qmax, 1.0).astype(np.float32)
+    q = np.clip(np.rint(vals / scales[:, :, None]), -qmax, qmax).astype(np.int8)
+    if value_dtype == "int4":
+        if q.shape[2] % 2:
+            q = np.pad(q, ((0, 0), (0, 0), (0, 1)))
+            positions = np.pad(positions, ((0, 0), (0, 0), (0, 1)), constant_values=-1)
+        q = pack_nibbles(q)
+    return QuantizedRowPacked(
+        k=p.k, c=p.c, m=p.m, a=p.a, value_dtype=value_dtype,
+        values=q, row_positions=np.ascontiguousarray(positions),
+        scales=scales, dense_itemsize=int(np.asarray(p.values).dtype.itemsize),
+    )
+
+
+def dequantize_rows(q: QuantizedRowPacked) -> RowPacked:
+    """Expand a quantized pack back to a float32 :class:`RowPacked`.
+
+    The reconstruction is exact w.r.t. the stored integers — ``q * scale``
+    in float32 — which is precisely what the fused kernel computes in VMEM,
+    so this is the oracle for kernel-vs-reference bit-equality."""
+    raw = np.asarray(q.values)
+    if q.value_dtype == "int4":
+        raw = unpack_nibbles(raw)
+    vals = raw.astype(np.float32) * np.asarray(q.scales, np.float32)[:, :, None]
+    return RowPacked(
+        k=q.k, c=q.c, m=q.m, a=q.a,
+        values=vals, row_positions=np.asarray(q.row_positions),
+    )
+
+
+# --------------------------------------------------------------------------
+# N:M structured pack (S2TA DBB blocks) — comparison arm
+# --------------------------------------------------------------------------
+
+
+def nm_mask(w: np.ndarray, n: int, block: int) -> np.ndarray:
+    """Boolean keep-mask enforcing N:M structure along each row: in every
+    block of ``block`` consecutive columns keep the ``n`` largest-magnitude
+    entries (S2TA's density-bound block, PAPERS.md).  Columns past the last
+    full block are kept as-is."""
+    if not 1 <= n <= block:
+        raise ValueError(f"need 1 <= n <= block, got n={n} block={block}")
+    k, c = w.shape
+    c_full = (c // block) * block
+    mask = np.ones_like(w, dtype=bool)
+    if c_full:
+        blk = np.abs(w[:, :c_full]).reshape(k, c_full // block, block)
+        # keep the top-n magnitudes per block; argpartition is O(block)
+        kth = np.argpartition(blk, block - n, axis=2)[:, :, : block - n]
+        bm = np.ones_like(blk, dtype=bool)
+        np.put_along_axis(bm, kth, False, axis=2)
+        mask[:, :c_full] = bm.reshape(k, c_full)
+    return mask
+
+
+def pack_rows_nm(
+    w: np.ndarray, n: int = 2, block: int = 4, m: int = 128, a: int = 16
+) -> RowPacked:
+    """Prune ``w`` to N:M structure, then row-pack it.  The result is an
+    ordinary :class:`RowPacked` — same kernel interface — but with a hard
+    per-window slot bound of ``n * ceil(m / block)``, i.e. job count is
+    data-independent, the property structured sparsity buys."""
+    w = np.asarray(w)
+    return pack_rows(np.where(nm_mask(w, n, block), w, 0), m=m, a=a)

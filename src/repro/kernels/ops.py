@@ -28,6 +28,8 @@ __all__ = [
     "RowPackedLinear",
     "pack_linear_rows",
     "pack_linear_rows_t",
+    "pack_linear_rows_nm",
+    "dequantize_linear_values",
     "apply_row_packed",
     "apply_row_packed_ref",
     "choose_k_blk",
@@ -121,7 +123,14 @@ def matmul(x: jax.Array, w: jax.Array, *, interpret: bool | None = None) -> jax.
 import os  # noqa: E402
 import time  # noqa: E402
 
-from ..core.packing import RowPacked, pack_rows, pack_rows_t  # noqa: E402
+from ..core.packing import (  # noqa: E402
+    QUANT_DTYPES,
+    RowPacked,
+    pack_rows,
+    pack_rows_nm,
+    pack_rows_t,
+    quantize_rows,
+)
 from .ref import vusa_fused_mlp_ref, vusa_packed_ref  # noqa: E402
 from .vusa_packed import (  # noqa: E402
     DEFAULT_SLOT_CHUNK,
@@ -132,46 +141,102 @@ from .vusa_packed import (  # noqa: E402
 
 @dataclasses.dataclass
 class RowPackedLinear:
-    """Device-resident row-wise VUSA pack (see kernels/vusa_packed.py)."""
+    """Device-resident row-wise VUSA pack (see kernels/vusa_packed.py).
 
-    values: jax.Array  # (T, K, J*A)
+    ``value_dtype="dense"`` (default) keeps values in their native float
+    dtype.  ``"int8"``/``"int4"`` carry raw quantized bytes (int4 nibble-
+    packed, two slots per byte) plus per-(window, row) fp32 ``scales``;
+    ``dense_itemsize`` remembers the original dense weight's element size so
+    byte-ratio accounting keeps the honest denominator."""
+
+    values: jax.Array  # (T, K, J*A) float, or (T, K, Sb) int8 when quantized
     positions: jax.Array  # (T, K, J*A) int8
     k: int
     c: int
     a: int
     m: int = 128  # window width (lanes)
+    scales: jax.Array | None = None  # (T, K) fp32, quantized packs only
+    value_dtype: str = "dense"
+    dense_itemsize: int | None = None
+
+    @property
+    def slots(self) -> int:
+        """Logical slot count — positions are never nibble-packed."""
+        return self.positions.shape[2]
 
     @property
     def byte_ratio(self) -> float:
-        t, k, s = self.values.shape
-        dense = self.k * t * self.m * self.values.dtype.itemsize
-        return t * k * s * (self.values.dtype.itemsize + 1) / dense
+        t = self.values.shape[0]
+        vb = self.values.dtype.itemsize
+        dense_b = self.dense_itemsize if self.dense_itemsize else vb
+        dense = self.k * t * self.m * dense_b
+        packed = self.values.size * vb + self.positions.size
+        if self.scales is not None:
+            packed += self.scales.size * self.scales.dtype.itemsize
+        return packed / dense
 
 
-def pack_linear_rows(w: np.ndarray, m: int = 128, a: int = 16) -> RowPackedLinear:
-    rp: RowPacked = pack_rows(np.asarray(w), m=m, a=a)
+def _linear_from_pack(rp: RowPacked, value_dtype: str) -> RowPackedLinear:
+    if value_dtype == "dense":
+        return RowPackedLinear(
+            values=jnp.asarray(rp.values),
+            positions=jnp.asarray(rp.row_positions),
+            k=rp.k, c=rp.c, a=rp.a, m=rp.m,
+        )
+    if value_dtype not in QUANT_DTYPES:
+        raise ValueError(
+            f"value_dtype must be 'dense' or one of {QUANT_DTYPES}, got {value_dtype!r}"
+        )
+    q = quantize_rows(rp, value_dtype)
     return RowPackedLinear(
-        values=jnp.asarray(rp.values),
-        positions=jnp.asarray(rp.row_positions),
-        k=rp.k,
-        c=rp.c,
-        a=a,
-        m=m,
+        values=jnp.asarray(q.values),
+        positions=jnp.asarray(q.row_positions),
+        k=q.k, c=q.c, a=q.a, m=q.m,
+        scales=jnp.asarray(q.scales),
+        value_dtype=value_dtype,
+        dense_itemsize=q.dense_itemsize,
     )
 
 
-def pack_linear_rows_t(w: np.ndarray, m: int = 128, a: int = 16) -> RowPackedLinear:
+def pack_linear_rows(
+    w: np.ndarray, m: int = 128, a: int = 16, value_dtype: str = "dense"
+) -> RowPackedLinear:
+    return _linear_from_pack(pack_rows(np.asarray(w), m=m, a=a), value_dtype)
+
+
+def pack_linear_rows_t(
+    w: np.ndarray, m: int = 128, a: int = 16, value_dtype: str = "dense"
+) -> RowPackedLinear:
     """Row-pack ``w`` *transposed* — windows cover ``w``'s leading (reduction)
     dim, the operand shape ``vusa_fused_mlp_matmul`` wants for ``w_down``."""
-    rp: RowPacked = pack_rows_t(np.asarray(w), m=m, a=a)
-    return RowPackedLinear(
-        values=jnp.asarray(rp.values),
-        positions=jnp.asarray(rp.row_positions),
-        k=rp.k,
-        c=rp.c,
-        a=a,
-        m=m,
-    )
+    return _linear_from_pack(pack_rows_t(np.asarray(w), m=m, a=a), value_dtype)
+
+
+def pack_linear_rows_nm(
+    w: np.ndarray,
+    n: int = 2,
+    block: int = 4,
+    m: int = 128,
+    a: int = 16,
+    value_dtype: str = "dense",
+) -> RowPackedLinear:
+    """Prune to N:M structure (S2TA DBB blocks) then row-pack — the
+    structured-sparsity comparison arm, same kernel interface."""
+    return _linear_from_pack(pack_rows_nm(np.asarray(w), n=n, block=block, m=m, a=a), value_dtype)
+
+
+def dequantize_linear_values(p: RowPackedLinear) -> jax.Array:
+    """fp32 (T, K, S) value slots of any pack — the jnp twin of the kernel's
+    VMEM dequant (int4 nibbles decoded with the same arithmetic shifts), used
+    by the reference appliers and fault tooling."""
+    raw = p.values
+    if p.value_dtype == "dense":
+        return raw.astype(jnp.float32)
+    if p.value_dtype == "int4":
+        lo = jnp.right_shift(jnp.left_shift(raw, 4), 4)
+        hi = jnp.right_shift(raw, 4)
+        raw = jnp.stack([lo, hi], axis=-1).reshape(raw.shape[:-1] + (raw.shape[-1] * 2,))
+    return raw.astype(jnp.float32) * p.scales.astype(jnp.float32)[..., None]
 
 
 # -- k_blk / m tuning ------------------------------------------------------
@@ -244,9 +309,11 @@ def _tune_key(
     # one-pass "onehot" reconstruction is generally wrong for the per-slot
     # "loop" baseline (and vice versa) — the seed omitted both, so a cache
     # entry from one mode silently drove the other
+    # value_dtype must be explicit: int8 and int4 packs share the jnp int8
+    # array dtype, so str(dtype) alone would collide their cache entries
     return (
         xf.shape[-1], p.values.shape[2], p.m, xf.shape[0],
-        str(p.values.dtype), interp, jax.default_backend(),
+        str(p.values.dtype), p.value_dtype, interp, jax.default_backend(),
         reconstruct, slot_chunk,
     )
 
@@ -269,8 +336,8 @@ def autotune_row_packed(
     best_blk, best_t = None, float("inf")
     for blk in _kblk_candidates(xf.shape[-1]):
         f = lambda a: vusa_packed_matmul(
-            a, p.values, p.positions, m=p.m, k_blk=blk, interpret=interp,
-            reconstruct=reconstruct, slot_chunk=slot_chunk,
+            a, p.values, p.positions, p.scales, m=p.m, k_blk=blk, interpret=interp,
+            reconstruct=reconstruct, slot_chunk=slot_chunk, value_dtype=p.value_dtype,
         )
         f(xf).block_until_ready()  # compile
         t0 = time.perf_counter()
@@ -301,7 +368,7 @@ def apply_row_packed(
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
     k = xf.shape[-1]
-    slots = p.values.shape[2]
+    slots = p.slots  # logical slots: the scratch bound sees decoded nibbles
     if k_blk is None:
         if os.environ.get("REPRO_VUSA_KBLK"):  # explicit override beats the cache
             k_blk = choose_k_blk(k, slots, p.m)
@@ -316,11 +383,13 @@ def apply_row_packed(
         xf,
         p.values,
         p.positions,
+        p.scales,
         m=p.m,
         k_blk=max(k_blk, 1),
         interpret=interp,
         reconstruct=reconstruct,
         slot_chunk=slot_chunk,
+        value_dtype=p.value_dtype,
     )
     return y[..., : p.c].reshape(*lead, p.c).astype(x.dtype)
 
@@ -328,7 +397,7 @@ def apply_row_packed(
 def apply_row_packed_ref(x: jax.Array, p: RowPackedLinear) -> jax.Array:
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
-    y = vusa_packed_ref(xf, p.values, p.positions)
+    y = vusa_packed_ref(xf, dequantize_linear_values(p), p.positions)
     return y[..., : p.c].reshape(*lead, p.c).astype(x.dtype)
 
 
@@ -345,6 +414,9 @@ def _check_fused_packs(
     assert gate.c == up.c == down_t.c, (gate.c, up.c, down_t.c)  # all windowed over ff
     t = gate.values.shape[0]
     assert up.values.shape[0] == t and down_t.values.shape[0] == t
+    assert gate.value_dtype == up.value_dtype == down_t.value_dtype, (
+        gate.value_dtype, up.value_dtype, down_t.value_dtype,
+    )
 
 
 def _fused_tune_key(
@@ -359,7 +431,8 @@ def _fused_tune_key(
     return (
         "fused", xf.shape[-1], down_t.k, xf.shape[0],
         gate.values.shape[2], up.values.shape[2], down_t.values.shape[2], gate.m,
-        str(gate.values.dtype), interp, jax.default_backend(), reconstruct, slot_chunk,
+        str(gate.values.dtype), gate.value_dtype, interp, jax.default_backend(),
+        reconstruct, slot_chunk,
     )
 
 
@@ -389,8 +462,10 @@ def autotune_fused_mlp(
     for blk in sorted(set(_kblk_candidates(xf.shape[-1]) + _kblk_candidates(down_t.k))):
         f = lambda a: vusa_fused_mlp_matmul(
             a, gate.values, gate.positions, up.values, up.positions,
-            down_t.values, down_t.positions, m=gate.m, k_blk=blk,
+            down_t.values, down_t.positions,
+            gate.scales, up.scales, down_t.scales, m=gate.m, k_blk=blk,
             interpret=interp, reconstruct=reconstruct, slot_chunk=slot_chunk,
+            value_dtype=gate.value_dtype,
         )
         f(xf).block_until_ready()  # compile
         t0 = time.perf_counter()
@@ -429,7 +504,7 @@ def apply_fused_mlp(
     k = xf.shape[-1]
     _check_fused_packs(k, gate, up, down_t)
     if k_blk is None:
-        slots = max(gate.values.shape[2], up.values.shape[2], down_t.values.shape[2])
+        slots = max(gate.slots, up.slots, down_t.slots)
         if os.environ.get("REPRO_VUSA_KBLK"):  # explicit override beats the cache
             k_blk = choose_k_blk(k, slots, gate.m)
         else:
@@ -444,11 +519,15 @@ def apply_fused_mlp(
         up.positions,
         down_t.values,
         down_t.positions,
+        gate.scales,
+        up.scales,
+        down_t.scales,
         m=gate.m,
         k_blk=max(int(k_blk), 1),
         interpret=interp,
         reconstruct=reconstruct,
         slot_chunk=slot_chunk,
+        value_dtype=gate.value_dtype,
     )
     return y.reshape(*lead, down_t.k).astype(x.dtype)
 
@@ -460,8 +539,9 @@ def apply_fused_mlp_ref(
     xf = x.reshape(-1, x.shape[-1])
     _check_fused_packs(xf.shape[-1], gate, up, down_t)
     y = vusa_fused_mlp_ref(
-        xf, gate.values, gate.positions, up.values, up.positions,
-        down_t.values, down_t.positions, m=gate.m,
+        xf, dequantize_linear_values(gate), gate.positions,
+        dequantize_linear_values(up), up.positions,
+        dequantize_linear_values(down_t), down_t.positions, m=gate.m,
     )
     return y.reshape(*lead, down_t.k).astype(x.dtype)
 
@@ -489,20 +569,29 @@ def shard_linear_windows(p: RowPackedLinear, n_shards: int) -> RowPackedLinear:
     """Pad the window axis to a multiple of ``n_shards`` with no-op windows
     (value 0, position -1) — the device-array twin of
     ``core.packing.shard_windows``.  ``k``/``c`` metadata is unchanged: pad
-    windows reconstruct zero tiles past the real column range."""
+    windows reconstruct zero tiles past the real column range.  Quantized
+    packs pad scales with 1.0 so the no-op windows dequant to exact zeros
+    while staying finite."""
     t = p.values.shape[0]
     pad = (-t) % n_shards
     if pad == 0:
         return p
     values = jnp.pad(p.values, ((0, pad), (0, 0), (0, 0)))
     positions = jnp.pad(p.positions, ((0, pad), (0, 0), (0, 0)), constant_values=-1)
-    return RowPackedLinear(values=values, positions=positions, k=p.k, c=p.c, a=p.a, m=p.m)
+    scales = None
+    if p.scales is not None:
+        scales = jnp.pad(p.scales, ((0, pad), (0, 0)), constant_values=1.0)
+    return RowPackedLinear(
+        values=values, positions=positions, k=p.k, c=p.c, a=p.a, m=p.m,
+        scales=scales, value_dtype=p.value_dtype, dense_itemsize=p.dense_itemsize,
+    )
 
 
-def _local_view(p: RowPackedLinear, values, positions, t_local: int) -> RowPackedLinear:
+def _local_view(p: RowPackedLinear, values, positions, t_local: int, scales=None) -> RowPackedLinear:
     """Per-shard view: same geometry, ``c`` covering only the local windows."""
     return RowPackedLinear(
-        values=values, positions=positions, k=p.k, c=t_local * p.m, a=p.a, m=p.m
+        values=values, positions=positions, k=p.k, c=t_local * p.m, a=p.a, m=p.m,
+        scales=scales, value_dtype=p.value_dtype, dense_itemsize=p.dense_itemsize,
     )
 
 
@@ -531,20 +620,23 @@ def apply_row_packed_sharded(
     t_local = t // tp
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
+    quant = p.scales is not None
 
-    def local(xf, values, positions):
+    def local(xf, values, positions, scales=None):
         y = apply_row_packed(
-            xf, _local_view(p, values, positions, t_local), interpret=interpret
+            xf, _local_view(p, values, positions, t_local, scales), interpret=interpret
         )
         return jax.lax.all_gather(y, axis_name, axis=1, tiled=True)
 
+    # scales share the leading window axis, so they ride the same spec
+    operands = (xf, p.values, p.positions) + ((p.scales,) if quant else ())
     y = shard_map(
         local,
         mesh=mesh,
-        in_specs=(_P(), _P(axis_name), _P(axis_name)),
+        in_specs=(_P(),) + (_P(axis_name),) * (3 if quant else 2),
         out_specs=_P(),
         check_rep=False,
-    )(xf, p.values, p.positions)
+    )(*operands)
     return y[..., : p.c].reshape(*lead, p.c).astype(x.dtype)
 
 
@@ -576,23 +668,27 @@ def apply_fused_mlp_sharded(
     t_local = gate.values.shape[0] // tp
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
+    quant = gate.scales is not None
 
-    def local(xf, gv, gp, uv, upp, dv, dp):
+    def local(xf, gv, gp, uv, upp, dv, dp, gs=None, us=None, ds=None):
         y = apply_fused_mlp(
             xf,
-            _local_view(gate, gv, gp, t_local),
-            _local_view(up, uv, upp, t_local),
-            _local_view(down_t, dv, dp, t_local),
+            _local_view(gate, gv, gp, t_local, gs),
+            _local_view(up, uv, upp, t_local, us),
+            _local_view(down_t, dv, dp, t_local, ds),
             interpret=interpret,
         )
         return jax.lax.psum(y.astype(jnp.float32), axis_name)
 
+    operands = (
+        xf, gate.values, gate.positions, up.values, up.positions,
+        down_t.values, down_t.positions,
+    ) + ((gate.scales, up.scales, down_t.scales) if quant else ())
     y = shard_map(
         local,
         mesh=mesh,
-        in_specs=(_P(),) + (_P(axis_name),) * 6,
+        in_specs=(_P(),) + (_P(axis_name),) * (9 if quant else 6),
         out_specs=_P(),
         check_rep=False,
-    )(xf, gate.values, gate.positions, up.values, up.positions,
-      down_t.values, down_t.positions)
+    )(*operands)
     return y.reshape(*lead, down_t.k).astype(x.dtype)

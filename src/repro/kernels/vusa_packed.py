@@ -31,6 +31,12 @@ Values may be fp32 or bf16; accumulation is always fp32 (both the one-hot
 contraction and the MXU matmul run with ``preferred_element_type=float32``)
 and the kernel output is fp32.
 
+Quantized value slots (DESIGN.md §10): with ``value_dtype="int8"`` or
+``"int4"`` the value operand is raw int8 bytes (two nibble slots per byte
+for int4) plus a per-(window, row) fp32 ``scales`` operand, and dequant is
+fused into the VMEM reconstruction — HBM only ever moves quantized bytes.
+Positions stay full-resolution int8 either way.
+
 Grid: (output windows, K blocks); K innermost for output-block accumulation.
 VMEM per step: x (B, K_blk), vals (K_blk, J*A), pos (K_blk, J*A),
 one-hot scratch (K_blk, J*A, M) for "onehot", reconstructed W (K_blk, M)
@@ -105,6 +111,21 @@ def _reconstruct(vals, pos, m: int, reconstruct: str, slot_chunk: int):
     return _reconstruct_loop(vals, pos, m)
 
 
+def _dequant(raw, scales, value_dtype: str):
+    """Fused VMEM dequant: raw int8 slots (R, Sb) + per-row scales (R,)
+    -> fp32 values (R, S).
+
+    ``int4`` decodes two slots per byte with arithmetic shifts — the low
+    nibble via ``(b << 4) >> 4`` (sign-extend), the high via ``b >> 4`` —
+    interleaved back to slot order before scaling.  HBM only ever moved the
+    quantized bytes; the fp32 expansion exists only in VMEM."""
+    if value_dtype == "int4":
+        lo = jnp.right_shift(jnp.left_shift(raw, 4), 4)
+        hi = jnp.right_shift(raw, 4)
+        raw = jnp.stack([lo, hi], axis=-1).reshape(raw.shape[0], -1)
+    return raw.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
+
+
 def _kernel(x_ref, val_ref, pos_ref, y_ref, *, m: int, reconstruct: str, slot_chunk: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -118,40 +139,85 @@ def _kernel(x_ref, val_ref, pos_ref, y_ref, *, m: int, reconstruct: str, slot_ch
     ).astype(y_ref.dtype)
 
 
+def _qkernel(
+    x_ref, val_ref, pos_ref, scale_ref, y_ref,
+    *, m: int, reconstruct: str, slot_chunk: int, value_dtype: str,
+):
+    """Quantized-values variant of :func:`_kernel`: the value block arrives
+    as raw int8 (nibble-packed for int4), dequant happens in VMEM right
+    before the one-hot reconstruction.  fp32 accumulation unchanged."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    vals = _dequant(val_ref[0], scale_ref[0], value_dtype)  # (K_blk, S) fp32
+    pos = pos_ref[0].astype(jnp.int32)
+    w = _reconstruct(vals, pos, m, reconstruct, slot_chunk)
+    y_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("interpret", "k_blk", "m", "reconstruct", "slot_chunk")
+    jax.jit,
+    static_argnames=("interpret", "k_blk", "m", "reconstruct", "slot_chunk", "value_dtype"),
 )
 def vusa_packed_matmul(
     x: jax.Array,  # (B, K)
     values: jax.Array,  # (T, K, J*A)  per window: A slots x J jobs per row
     positions: jax.Array,  # (T, K, J*A) int8 lane index per slot (-1 = idle)
+    scales: jax.Array | None = None,  # (T, K) fp32, quantized packs only
     *,
     m: int = 128,
     k_blk: int = 256,
     interpret: bool = True,
     reconstruct: str = "onehot",
     slot_chunk: int = DEFAULT_SLOT_CHUNK,
+    value_dtype: str = "dense",
 ) -> jax.Array:
     b, k = x.shape
-    t, kk, slots = values.shape
+    t, kk, vslots = values.shape
+    slots = positions.shape[2]
     assert kk == k, (kk, k)
     assert m <= 128, m  # int8 positions index lanes within one MXU tile
     assert reconstruct in RECONSTRUCT_MODES, reconstruct
     k_blk = min(k_blk, k)
     assert k % k_blk == 0, (k, k_blk)
     grid = (t, k // k_blk)
+    if value_dtype == "dense":
+        assert scales is None and vslots == slots, (value_dtype, vslots, slots)
+        return pl.pallas_call(
+            functools.partial(_kernel, m=m, reconstruct=reconstruct, slot_chunk=slot_chunk),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((b, k_blk), lambda i, l: (0, l)),
+                pl.BlockSpec((1, k_blk, slots), lambda i, l: (i, l, 0)),
+                pl.BlockSpec((1, k_blk, slots), lambda i, l: (i, l, 0)),
+            ],
+            out_specs=pl.BlockSpec((b, m), lambda i, l: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((b, t * m), jnp.float32),
+            interpret=interpret,
+        )(x, values, positions)
+    assert scales is not None and scales.shape == (t, k), (value_dtype, None if scales is None else scales.shape)
+    # int4 packs two slots per byte; either way the decode must cover exactly
+    # the position slots
+    assert vslots * (2 if value_dtype == "int4" else 1) == slots, (value_dtype, vslots, slots)
     return pl.pallas_call(
-        functools.partial(_kernel, m=m, reconstruct=reconstruct, slot_chunk=slot_chunk),
+        functools.partial(
+            _qkernel, m=m, reconstruct=reconstruct, slot_chunk=slot_chunk, value_dtype=value_dtype
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((b, k_blk), lambda i, l: (0, l)),
+            pl.BlockSpec((1, k_blk, vslots), lambda i, l: (i, l, 0)),
             pl.BlockSpec((1, k_blk, slots), lambda i, l: (i, l, 0)),
-            pl.BlockSpec((1, k_blk, slots), lambda i, l: (i, l, 0)),
+            pl.BlockSpec((1, k_blk), lambda i, l: (i, l)),
         ],
         out_specs=pl.BlockSpec((b, m), lambda i, l: (0, i)),
         out_shape=jax.ShapeDtypeStruct((b, t * m), jnp.float32),
         interpret=interpret,
-    )(x, values, positions)
+    )(x, values, positions, scales)
 
 
 # --------------------------------------------------------------------------
@@ -159,19 +225,28 @@ def vusa_packed_matmul(
 # --------------------------------------------------------------------------
 
 
-def _matmul_packed_window(x, val_ref, pos_ref, m, k_blk, reconstruct, slot_chunk):
+def _matmul_packed_window(
+    x, val_ref, pos_ref, m, k_blk, reconstruct, slot_chunk,
+    scale_ref=None, value_dtype="dense",
+):
     """``x @ W_window`` for one window's packed block ref, chunked over K rows.
 
     ``x``: (B, K) fp32; ``val_ref``/``pos_ref``: (1, K, S) block refs.
     Reconstructs the dense tile ``k_blk`` rows at a time (bounding the
     one-hot scratch at ``k_blk * slot_chunk * m`` fp32) and accumulates the
-    partial products in fp32.  Returns (B, m) fp32.
+    partial products in fp32.  With ``scale_ref`` (a (1, K) fp32 block ref)
+    the value chunk is raw quantized bytes and dequant is fused into the
+    chunk load.  Returns (B, m) fp32.
     """
     k = x.shape[1]
     acc = jnp.zeros((x.shape[0], m), jnp.float32)
     for k0 in range(0, k, k_blk):
         width = min(k_blk, k - k0)
-        vals = val_ref[0, k0 : k0 + width].astype(jnp.float32)
+        raw = val_ref[0, k0 : k0 + width]
+        if scale_ref is None:
+            vals = raw.astype(jnp.float32)
+        else:
+            vals = _dequant(raw, scale_ref[0, k0 : k0 + width], value_dtype)
         pos = pos_ref[0, k0 : k0 + width].astype(jnp.int32)
         w = _reconstruct(vals, pos, m, reconstruct, slot_chunk)
         acc += jnp.dot(x[:, k0 : k0 + width], w, preferred_element_type=jnp.float32)
@@ -216,8 +291,54 @@ def _fused_mlp_kernel(
         y_ref[:, c0 : c0 + width] += jnp.dot(h, wd.T, preferred_element_type=jnp.float32)
 
 
+def _fused_mlp_qkernel(
+    x_ref,
+    gv_ref,
+    gp_ref,
+    gs_ref,
+    uv_ref,
+    up_ref,
+    us_ref,
+    dv_ref,
+    dp_ref,
+    ds_ref,
+    y_ref,
+    *,
+    m: int,
+    k_blk: int,
+    reconstruct: str,
+    slot_chunk: int,
+    value_dtype: str,
+):
+    """Quantized-values variant of :func:`_fused_mlp_kernel`: each of the
+    three packs carries raw int8 (nibble-packed for int4) value slots plus a
+    per-(window, row) fp32 scale block; dequant is fused into every chunked
+    reconstruction so only quantized bytes ever stream from HBM."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (B, K)
+    gate = _matmul_packed_window(
+        x, gv_ref, gp_ref, m, k_blk, reconstruct, slot_chunk, gs_ref, value_dtype
+    )
+    up = _matmul_packed_window(
+        x, uv_ref, up_ref, m, k_blk, reconstruct, slot_chunk, us_ref, value_dtype
+    )
+    h = jax.nn.silu(gate) * up  # (B, m)
+    d_out = y_ref.shape[1]
+    for c0 in range(0, d_out, k_blk):
+        width = min(k_blk, d_out - c0)
+        vals = _dequant(dv_ref[0, c0 : c0 + width], ds_ref[0, c0 : c0 + width], value_dtype)
+        pos = dp_ref[0, c0 : c0 + width].astype(jnp.int32)
+        wd = _reconstruct(vals, pos, m, reconstruct, slot_chunk)
+        y_ref[:, c0 : c0 + width] += jnp.dot(h, wd.T, preferred_element_type=jnp.float32)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("interpret", "k_blk", "m", "reconstruct", "slot_chunk")
+    jax.jit,
+    static_argnames=("interpret", "k_blk", "m", "reconstruct", "slot_chunk", "value_dtype"),
 )
 def vusa_fused_mlp_matmul(
     x: jax.Array,  # (B, K)
@@ -227,12 +348,16 @@ def vusa_fused_mlp_matmul(
     up_positions: jax.Array,  # (T, K, Su) int8
     down_values: jax.Array,  # (T, D, Sd)   w_down.T row-pack (ff windowed)
     down_positions: jax.Array,  # (T, D, Sd) int8
+    gate_scales: jax.Array | None = None,  # (T, K) fp32, quantized packs only
+    up_scales: jax.Array | None = None,  # (T, K) fp32
+    down_scales: jax.Array | None = None,  # (T, D) fp32
     *,
     m: int = 128,
     k_blk: int = 256,
     interpret: bool = True,
     reconstruct: str = "onehot",
     slot_chunk: int = DEFAULT_SLOT_CHUNK,
+    value_dtype: str = "dense",
 ) -> jax.Array:
     """Whole SwiGLU MLP in one ``pallas_call``: ``silu(x@Wg) * (x@Wu) @ Wd``.
 
@@ -255,22 +380,60 @@ def vusa_fused_mlp_matmul(
     assert m <= 128, m
     assert reconstruct in RECONSTRUCT_MODES, reconstruct
     k_blk = max(1, min(k_blk, max(k, d_out)))
-    sg, su, sd = gate_values.shape[2], up_values.shape[2], down_values.shape[2]
+    if value_dtype == "dense":
+        assert gate_scales is None and up_scales is None and down_scales is None
+        sg, su, sd = gate_values.shape[2], up_values.shape[2], down_values.shape[2]
+        return pl.pallas_call(
+            functools.partial(
+                _fused_mlp_kernel, m=m, k_blk=k_blk, reconstruct=reconstruct, slot_chunk=slot_chunk
+            ),
+            grid=(t,),
+            in_specs=[
+                pl.BlockSpec((b, k), lambda i: (0, 0)),
+                pl.BlockSpec((1, k, sg), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, k, sg), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, k, su), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, k, su), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, d_out, sd), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, d_out, sd), lambda i: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((b, d_out), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, d_out), jnp.float32),
+            interpret=interpret,
+        )(x, gate_values, gate_positions, up_values, up_positions, down_values, down_positions)
+    assert gate_scales is not None and up_scales is not None and down_scales is not None
+    assert gate_scales.shape == (t, k) and up_scales.shape == (t, k), (gate_scales.shape, up_scales.shape)
+    assert down_scales.shape == (t, d_out), (down_scales.shape, t, d_out)
+    nib = 2 if value_dtype == "int4" else 1
+    # value slot dims may be nibble-packed; position slot dims are the truth
+    vg, vu, vd = gate_values.shape[2], up_values.shape[2], down_values.shape[2]
+    sg, su, sd = gate_positions.shape[2], up_positions.shape[2], down_positions.shape[2]
+    assert (vg * nib, vu * nib, vd * nib) == (sg, su, sd), (value_dtype, (vg, vu, vd), (sg, su, sd))
     return pl.pallas_call(
         functools.partial(
-            _fused_mlp_kernel, m=m, k_blk=k_blk, reconstruct=reconstruct, slot_chunk=slot_chunk
+            _fused_mlp_qkernel,
+            m=m, k_blk=k_blk, reconstruct=reconstruct, slot_chunk=slot_chunk,
+            value_dtype=value_dtype,
         ),
         grid=(t,),
         in_specs=[
             pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k, vg), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, k, sg), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, k, sg), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k, vu), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, k, su), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, k, su), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_out, vd), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, d_out, sd), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, d_out, sd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d_out), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((b, d_out), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, d_out), jnp.float32),
         interpret=interpret,
-    )(x, gate_values, gate_positions, up_values, up_positions, down_values, down_positions)
+    )(
+        x,
+        gate_values, gate_positions, gate_scales,
+        up_values, up_positions, up_scales,
+        down_values, down_positions, down_scales,
+    )

@@ -32,6 +32,12 @@ def main():
         help="VUSA-pack the decode step: bare flag or 'mlp' = MLP trio only "
         "(the pre-§7 behaviour), 'all' = + qkv/o and untied LM head",
     )
+    ap.add_argument(
+        "--packed-values", default="bf16", choices=("bf16", "int8", "int4"),
+        help="packed value precision (DESIGN.md §10): bf16 = native float "
+        "values (default), int8/int4 = quantized value slots with "
+        "per-window fp32 scales and dequant fused into the kernels",
+    )
     ap.add_argument("--sparsity", type=float, default=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -87,7 +93,9 @@ def main():
         print(f"mesh {dict(mesh.shape)} over {len(mesh.devices.flat)} devices")
     faults = FaultConfig(cache_nan_rate=args.fault_rate) if args.fault_rate > 0 else None
     eng = Engine(cfg, params, ServeConfig(max_len=args.prompt_len + args.max_new + 8,
-                                          packed_weights=args.packed, faults=faults),
+                                          packed_weights=args.packed,
+                                          packed_values=args.packed_values,
+                                          faults=faults),
                  mesh=mesh)
     if args.requests > 0:
         sched = Scheduler(

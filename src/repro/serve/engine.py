@@ -44,6 +44,11 @@ class ServeConfig:
     packed_weights: bool | str = False
     packed_mlp: bool = False  # deprecated alias for packed_weights="mlp"
     fused_mlp: bool = True  # megakernel MLP (False = 3-dispatch measured baseline)
+    # packed value precision (DESIGN.md §10): "bf16" keeps the pack's native
+    # float values (byte-identical program to before the knob existed);
+    # "int8"/"int4" quantize value slots with per-(window, row) fp32 scales
+    # and fuse dequant into the kernels' VMEM reconstruction
+    packed_values: str = "bf16"
     vusa_m: int = 128  # window lanes (kernel tile)
     vusa_a: int = 16  # physical slots per row per job
     fused: bool = True  # on-device lax.scan decode loop (False = seed host loop)
@@ -65,6 +70,10 @@ class ServeConfig:
         if self.packed_weights not in (False, "mlp", "all"):
             raise ValueError(
                 f"packed_weights must be False, 'mlp' or 'all', got {self.packed_weights!r}"
+            )
+        if self.packed_values not in ("bf16", "int8", "int4"):
+            raise ValueError(
+                f"packed_values must be 'bf16', 'int8' or 'int4', got {self.packed_values!r}"
             )
 
 
@@ -93,6 +102,9 @@ class Engine:
                 cfg, params, sc.vusa_m, sc.vusa_a,
                 scope=sc.packed_weights, fused_mlp=sc.fused_mlp,
                 shards=mesh_axis_size(mesh, "model"),
+                # "bf16" = unquantized passthrough: the pack keeps the native
+                # param dtype, same program as before the knob existed
+                value_dtype="dense" if sc.packed_values == "bf16" else sc.packed_values,
             )
             f = sc.faults
             if f is not None and (f.pack_position_flips or f.pack_value_nans):

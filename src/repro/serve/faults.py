@@ -128,7 +128,15 @@ def _corrupt(packed: Dict, n: int, seed: int, leaf: str, value, occupied_only=Fa
         else:
             flat = int(rng.integers(arr.size))
             idx = np.unravel_index(flat, arr.shape)
-        e[leaf] = arr.at[idx].set(value)
+        if leaf == "values" and e.get("value_dtype", "dense") != "dense":
+            # quantized values are int8 bytes — NaN is unrepresentable there
+            # (and int4 value shape differs from the position slot shape).
+            # The float that corrupts instead is the occupied slot's dequant
+            # scale: its NaN propagates to every value it rescales, reaching
+            # the logits the same way a NaN value slot would.
+            e["scales"] = e["scales"].at[idx[:-1]].set(value)
+        else:
+            e[leaf] = arr.at[idx].set(value)
         group[name] = e
     return out
 

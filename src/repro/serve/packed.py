@@ -49,6 +49,7 @@ __all__ = [
     "lm_decode_step_packed",
     "packed_byte_ratios",
     "validate_packed",
+    "qdq_lm_params",
 ]
 
 ATTN_NAMES = ("wq", "wk", "wv", "wo")
@@ -63,17 +64,24 @@ def _stack_packs(packs) -> Dict:
     """Stack per-layer RowPackedLinear into one (L, ...) device dict.
 
     Jobs are padded to the max across layers so the stack is rectangular
-    (padded jobs are exact no-ops: value 0, position -1)."""
-    smax = max(p.values.shape[2] for p in packs)
+    (padded jobs are exact no-ops: value 0, position -1).  Quantized packs
+    pad the (possibly nibble-packed) value bytes with zeros — an idle
+    position never scatters, so the byte content there is ignored — and
+    stack the (T, K) scales unpadded."""
+    smax = max(p.positions.shape[2] for p in packs)
+    nib = 2 if packs[0].value_dtype == "int4" else 1
+    vmax = smax // nib
 
     def pad(p: RowPackedLinear):
-        _, _, s = p.values.shape
-        v = jnp.pad(p.values, ((0, 0), (0, 0), (0, smax - s)))
-        q = jnp.pad(p.positions, ((0, 0), (0, 0), (0, smax - s)), constant_values=-1)
+        v = jnp.pad(p.values, ((0, 0), (0, 0), (0, vmax - p.values.shape[2])))
+        q = jnp.pad(
+            p.positions, ((0, 0), (0, 0), (0, smax - p.positions.shape[2])),
+            constant_values=-1,
+        )
         return v, q
 
     vs, qs = zip(*(pad(p) for p in packs))
-    return {
+    out = {
         "values": jnp.stack(vs),
         "positions": jnp.stack(qs),
         "k": packs[0].k,
@@ -81,22 +89,32 @@ def _stack_packs(packs) -> Dict:
         "m": packs[0].m,
         "a": packs[0].a,
     }
+    if packs[0].value_dtype != "dense":
+        out["scales"] = jnp.stack([p.scales for p in packs])
+        out["value_dtype"] = packs[0].value_dtype
+        out["dense_itemsize"] = packs[0].dense_itemsize
+    return out
 
 
 def _stack_layers(
-    ws: np.ndarray, m: int, a: int, pack_fn=pack_linear_rows, shards: int = 1
+    ws: np.ndarray,
+    m: int,
+    a: int,
+    pack_fn=pack_linear_rows,
+    shards: int = 1,
+    value_dtype: str = "dense",
 ) -> Dict:
     """Pack every layer of a stacked (L, K, C) weight and stack the packs.
     ``shards`` pads each pack's window axis to a multiple (no-op windows) so
     the stacked window axis splits evenly over a TP mesh axis."""
     return _stack_packs([
-        shard_linear_windows(pack_fn(ws[layer], m=m, a=a), shards)
+        shard_linear_windows(pack_fn(ws[layer], m=m, a=a, value_dtype=value_dtype), shards)
         for layer in range(ws.shape[0])
     ])
 
 
 def _pack_one(p: RowPackedLinear) -> Dict:
-    return {
+    out = {
         "values": p.values,
         "positions": p.positions,
         "k": p.k,
@@ -104,13 +122,21 @@ def _pack_one(p: RowPackedLinear) -> Dict:
         "m": p.m,
         "a": p.a,
     }
+    if p.value_dtype != "dense":
+        out["scales"] = p.scales
+        out["value_dtype"] = p.value_dtype
+        out["dense_itemsize"] = p.dense_itemsize
+    return out
 
 
-def _as_linear(entry: Dict, values, positions) -> RowPackedLinear:
+def _as_linear(entry: Dict, values, positions, scales=None) -> RowPackedLinear:
     """Rebuild a RowPackedLinear from scanned per-layer leaves + static meta."""
     return RowPackedLinear(
         values=values, positions=positions,
         k=entry["k"], c=entry["c"], a=entry["a"], m=entry["m"],
+        scales=scales,
+        value_dtype=entry.get("value_dtype", "dense"),
+        dense_itemsize=entry.get("dense_itemsize"),
     )
 
 
@@ -132,6 +158,7 @@ def pack_lm_weights(
     scope: str = "all",
     fused_mlp: bool = True,
     shards: int = 1,
+    value_dtype: str = "dense",
 ) -> Dict:
     """Pack the dense-family decode-step weights; returns a structured dict.
 
@@ -143,20 +170,25 @@ def pack_lm_weights(
     3-dispatch baseline layout (``w_down`` packed plain).  ``shards`` pads
     every window axis to a multiple (no-op windows, exact) so the packs can
     be split over a TP mesh axis of that size — place them with
-    :func:`shard_packed` (DESIGN.md §8)."""
+    :func:`shard_packed` (DESIGN.md §8).  ``value_dtype="int8"``/``"int4"``
+    quantizes every pack's value slots with per-(window, row) fp32 scales
+    (DESIGN.md §10); ``"dense"`` keeps the native float dtype."""
     assert cfg.family == "dense", "packed decode path targets the dense family"
     assert scope in ("mlp", "all"), scope
     ffn = params["layers"]["ffn"]
     mlp: Dict = {
-        name: _stack_layers(np.asarray(ffn[name]), m, a, shards=shards)
+        name: _stack_layers(np.asarray(ffn[name]), m, a, shards=shards, value_dtype=value_dtype)
         for name in ("w_gate", "w_up")
     }
     if fused_mlp:
         mlp["w_down_t"] = _stack_layers(
-            np.asarray(ffn["w_down"]), m, a, pack_linear_rows_t, shards=shards
+            np.asarray(ffn["w_down"]), m, a, pack_linear_rows_t, shards=shards,
+            value_dtype=value_dtype,
         )
     else:
-        mlp["w_down"] = _stack_layers(np.asarray(ffn["w_down"]), m, a, shards=shards)
+        mlp["w_down"] = _stack_layers(
+            np.asarray(ffn["w_down"]), m, a, shards=shards, value_dtype=value_dtype
+        )
     out: Dict = {
         "mlp": mlp,
         "attn": None,
@@ -174,12 +206,15 @@ def pack_lm_weights(
                 if name == "wo"
                 else w.reshape(w.shape[0], w.shape[1], -1)  # q/k/v: (L, d, nh*hd)
             )
-            attn[name] = _stack_layers(flat, m, a, shards=shards)
+            attn[name] = _stack_layers(flat, m, a, shards=shards, value_dtype=value_dtype)
         out["attn"] = attn
         if not cfg.tie_embeddings:
             out["head"] = _pack_one(
                 shard_linear_windows(
-                    pack_linear_rows(np.asarray(params["lm_head"]), m=m, a=a), shards
+                    pack_linear_rows(
+                        np.asarray(params["lm_head"]), m=m, a=a, value_dtype=value_dtype
+                    ),
+                    shards,
                 )
             )
     validate_packed(out)  # pack-time guard: never hand out a malformed pack
@@ -202,7 +237,10 @@ def shard_packed(packed: Dict, mesh) -> Dict:
     def place(entry: Dict, axis: int) -> Dict:
         t = entry["values"].shape[axis]
         out = dict(entry)
-        for leaf in ("values", "positions"):
+        # scales share the window axis and must split identically — a scale
+        # sharded differently from its values would rescale the wrong windows
+        leaves = ("values", "positions") + (("scales",) if "scales" in entry else ())
+        for leaf in leaves:
             sh = window_sharding(mesh, t, entry[leaf].ndim, axis=axis)
             out[leaf] = jax.device_put(entry[leaf], sh)
         return out
@@ -249,10 +287,37 @@ def validate_packed(packed: Dict) -> None:
     for name, e in flat.items():
         v, q = e["values"], e["positions"]
         m, a, k, c = e["m"], e["a"], e["k"], e["c"]
-        if tuple(v.shape) != tuple(q.shape):
-            raise ValueError(
-                f"{name}: values shape {tuple(v.shape)} != positions {tuple(q.shape)}"
-            )
+        vdt = e.get("value_dtype", "dense")
+        nib = 2 if vdt == "int4" else 1
+        if vdt == "dense":
+            if tuple(v.shape) != tuple(q.shape):
+                raise ValueError(
+                    f"{name}: values shape {tuple(v.shape)} != positions {tuple(q.shape)}"
+                )
+        else:
+            # quantized: values are raw bytes (nibble-packed for int4); they
+            # must decode to exactly the position slots
+            if v.dtype != jnp.int8:
+                raise ValueError(f"{name}: quantized values dtype must be int8, got {v.dtype}")
+            if tuple(v.shape[:-1]) != tuple(q.shape[:-1]) or v.shape[-1] * nib != q.shape[-1]:
+                raise ValueError(
+                    f"{name}: {vdt} values shape {tuple(v.shape)} does not decode to "
+                    f"positions {tuple(q.shape)}"
+                )
+            s = e.get("scales")
+            if s is None:
+                raise ValueError(f"{name}: {vdt} pack is missing its scales")
+            if tuple(s.shape) != tuple(q.shape[:-1]):
+                raise ValueError(
+                    f"{name}: scales shape {tuple(s.shape)} != window/row "
+                    f"shape {tuple(q.shape[:-1])}"
+                )
+            if not bool(jnp.isfinite(s).all()):
+                i = tuple(int(x) for x in np.argwhere(~np.isfinite(np.asarray(s)))[0])
+                raise ValueError(f"{name}: non-finite dequant scale at {i}")
+            if bool((s <= 0).any()):
+                i = tuple(int(x) for x in np.argwhere(np.asarray(s) <= 0)[0])
+                raise ValueError(f"{name}: non-positive dequant scale at {i}")
         if q.dtype != jnp.int8:
             raise ValueError(f"{name}: positions dtype must be int8, got {q.dtype}")
         if v.ndim not in (3, 4):
@@ -261,7 +326,10 @@ def validate_packed(packed: Dict) -> None:
             raise ValueError(f"{name}: window m={m} / slots a={a} out of range (int8 lanes)")
         if v.shape[-2] != k:
             raise ValueError(f"{name}: pack rows {v.shape[-2]} != declared k={k}")
-        if v.shape[-1] % a:
+        # int4 pads the slot axis to even at quantize time, which can break
+        # the a-multiple; the kernel never consumes ``a``, so only dense and
+        # int8 packs (slot count unchanged by quantization) keep the check
+        if vdt != "int4" and v.shape[-1] % a:
             raise ValueError(f"{name}: slot count {v.shape[-1]} not a multiple of a={a}")
         if v.shape[-3] * m < c:
             raise ValueError(
@@ -278,7 +346,7 @@ def validate_packed(packed: Dict) -> None:
             raise ValueError(
                 f"{name}: position {int(qn[i])} at {i} outside [-1, {m}) — corrupt metadata"
             )
-        if not bool(jnp.isfinite(v).all()):
+        if vdt == "dense" and not bool(jnp.isfinite(v).all()):
             i = tuple(int(x) for x in np.argwhere(~np.isfinite(np.asarray(v)))[0])
             raise ValueError(f"{name}: non-finite packed value at {i}")
 
@@ -288,21 +356,99 @@ def packed_byte_ratios(packed: Dict, value_bytes: Optional[int] = None) -> Dict[
 
     Accepts both the structured ``pack_lm_weights`` dict and the legacy flat
     ``pack_lm_mlps`` dict.  ``value_bytes`` defaults to the packed value
-    itemsize."""
+    itemsize.  Quantized entries count their real bytes — nibble-packed
+    value bytes, full int8 positions, fp32 scales — against the *original*
+    dense weight's bytes (``dense_itemsize``), not the quantized itemsize:
+    the dense baseline being displaced did not shrink when the pack did."""
     flat = _flat_entries(packed)
     ratios: Dict[str, float] = {}
     tot_packed = tot_dense = 0
     for name, e in flat.items():
         v = e["values"]
-        vb = v.dtype.itemsize if value_bytes is None else value_bytes
         n_layers = v.shape[0] if v.ndim == 4 else 1
-        pb = v.size * (vb + 1)  # values + int8 positions
-        db = n_layers * e["k"] * e["c"] * vb
+        if e.get("value_dtype", "dense") == "dense":
+            vb = v.dtype.itemsize if value_bytes is None else value_bytes
+            pb = v.size * (vb + 1)  # values + int8 positions
+            db = n_layers * e["k"] * e["c"] * vb
+        else:
+            pb = (
+                v.size * v.dtype.itemsize
+                + e["positions"].size
+                + e["scales"].size * e["scales"].dtype.itemsize
+            )
+            dense_b = e["dense_itemsize"] if value_bytes is None else value_bytes
+            db = n_layers * e["k"] * e["c"] * dense_b
         ratios[name] = pb / db
         tot_packed += pb
         tot_dense += db
     ratios["total"] = tot_packed / max(tot_dense, 1)
     return ratios
+
+
+# --------------------------------------------------------------------------
+# quantize-dequantize dense oracle
+# --------------------------------------------------------------------------
+
+
+def _qdq_matrix(w2d: np.ndarray, m: int, a: int, value_dtype: str, transposed: bool = False):
+    """Quantize->dequantize one 2-D matrix under the *same* window geometry
+    the packer uses (``pack_rows_t`` for transposed-orientation packs), so
+    the roundtripped values are bitwise the fp32 products the kernel's fused
+    dequant reconstructs in VMEM."""
+    from ..core.packing import dequantize_rows, pack_rows, pack_rows_t, quantize_rows, unpack_rows
+
+    pack = (pack_rows_t if transposed else pack_rows)(w2d, m=m, a=a)
+    dense = unpack_rows(dequantize_rows(quantize_rows(pack, value_dtype)))
+    return np.ascontiguousarray(dense.T) if transposed else dense
+
+
+def qdq_lm_params(
+    cfg: ArchConfig,
+    params,
+    m: int = 128,
+    a: int = 16,
+    scope: str = "all",
+    fused_mlp: bool = True,
+    value_dtype: str = "int8",
+):
+    """Dense-oracle params: every matrix ``pack_lm_weights`` would quantize
+    is replaced by its quantize-dequantize roundtrip under identical window
+    geometry and orientation.  Running the *dense* decode path on these
+    params is the correctness oracle for the quantized packed path: the
+    kernel's VMEM dequant computes the same ``q * scale`` fp32 values, so
+    greedy token streams must match."""
+    assert scope in ("mlp", "all"), scope
+
+    def qdq_stack(ws: np.ndarray, transposed: bool = False) -> jnp.ndarray:
+        out = np.stack([
+            _qdq_matrix(ws[layer], m, a, value_dtype, transposed)
+            for layer in range(ws.shape[0])
+        ])
+        return jnp.asarray(out.astype(ws.dtype))
+
+    ffn = dict(params["layers"]["ffn"])
+    for name in ("w_gate", "w_up", "w_down"):
+        w = np.asarray(ffn[name])
+        ffn[name] = qdq_stack(w, transposed=(name == "w_down" and fused_mlp))
+    layers = {**params["layers"], "ffn": ffn}
+    out = {**params, "layers": layers}
+    if scope == "all":
+        attn = dict(params["layers"]["attn"])
+        for name in ATTN_NAMES:
+            w = np.asarray(attn[name])
+            flat = (
+                w.reshape(w.shape[0], -1, w.shape[-1])
+                if name == "wo"
+                else w.reshape(w.shape[0], w.shape[1], -1)
+            )
+            attn[name] = jnp.asarray(
+                np.asarray(qdq_stack(flat)).reshape(w.shape).astype(w.dtype)
+            )
+        layers["attn"] = attn
+        if not cfg.tie_embeddings:
+            w = np.asarray(params["lm_head"])
+            out["lm_head"] = jnp.asarray(_qdq_matrix(w, m, a, value_dtype).astype(w.dtype))
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -338,14 +484,21 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
 
     from ..models.layers import attention_decode  # noqa: PLC0415
 
-    def papply(entry, vals, poss, x2):
-        lin = _as_linear(entry, vals, poss)
+    def papply(entry, vals, poss, x2, scales=None):
+        lin = _as_linear(entry, vals, poss, scales)
         if mesh is not None:
             return apply_row_packed_sharded(x2, lin, mesh)
         return apply_row_packed(x2, lin)
 
     def arrays(group):  # scanned leaves only; meta stays static
-        return {n: {"values": e["values"], "positions": e["positions"]} for n, e in group.items()}
+        return {
+            n: {
+                leaf: e[leaf]
+                for leaf in ("values", "positions", "scales")
+                if leaf in e
+            }
+            for n, e in group.items()
+        }
 
     xs = (
         params["layers"],
@@ -360,7 +513,8 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
         wmm = (
             (
                 lambda name, x2: papply(
-                    attn[name], attn_l[name]["values"], attn_l[name]["positions"], x2
+                    attn[name], attn_l[name]["values"], attn_l[name]["positions"], x2,
+                    attn_l[name].get("scales"),
                 )
             )
             if attn is not None
@@ -376,7 +530,10 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
         if fused:
 
             def lin(name):
-                return _as_linear(mlp[name], mlp_l[name]["values"], mlp_l[name]["positions"])
+                return _as_linear(
+                    mlp[name], mlp_l[name]["values"], mlp_l[name]["positions"],
+                    mlp_l[name].get("scales"),
+                )
 
             if mesh is not None:
                 y2 = apply_fused_mlp_sharded(
@@ -387,7 +544,10 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
         else:  # 3-dispatch baseline: gate/up/down round-trip the (B, ff)
 
             def pap(name, x2):
-                return papply(mlp[name], mlp_l[name]["values"], mlp_l[name]["positions"], x2)
+                return papply(
+                    mlp[name], mlp_l[name]["values"], mlp_l[name]["positions"], x2,
+                    mlp_l[name].get("scales"),
+                )
 
             gate = jax.nn.silu(pap("w_gate", hf))
             up = pap("w_up", hf)
@@ -400,7 +560,9 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
     if packed.get("head") is not None:
         b, s, d = x.shape
         head = packed["head"]
-        logits = papply(head, head["values"], head["positions"], x.reshape(b * s, d))
+        logits = papply(
+            head, head["values"], head["positions"], x.reshape(b * s, d), head.get("scales")
+        )
         logits = logits.reshape(b, s, -1)
     else:
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]

@@ -1,0 +1,140 @@
+"""The bench regression gate itself (benchmarks/run.py): check_against must
+name every hole it finds — a gated metric missing from the fresh run, a
+gated bench that didn't run, a declared metric absent from the baseline —
+instead of crashing or silently passing, and the --summary-md writer must
+render the same comparison as a markdown table for $GITHUB_STEP_SUMMARY.
+
+benchmarks/ is off PYTHONPATH by design (it's a script, not a package), so
+the module loads via importlib from its file path; RESULTS is populated
+directly so no actual benchmark runs.
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_RUN_PY = Path(__file__).resolve().parent.parent / "benchmarks" / "run.py"
+
+
+@pytest.fixture()
+def run_mod():
+    spec = importlib.util.spec_from_file_location("bench_run", _RUN_PY)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _gate(run_mod, tmp_path, baseline, results, tolerance=0.25):
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps(baseline))
+    run_mod.RESULTS.clear()
+    run_mod.RESULTS.update(results)
+    return run_mod.check_against(str(path), tolerance)
+
+
+def test_gate_passes_clean(run_mod, tmp_path, capsys):
+    base = {"bench_packed_decode": {"int8_tok_per_s": 400.0}}
+    fresh = {"bench_packed_decode": {"int8_tok_per_s": 500.0}}
+    # keep the inverse (UNGATED) check out of the way: declare only the
+    # metric under test
+    run_mod.BASELINE_METRICS = {"bench_packed_decode": ["int8_tok_per_s"]}
+    assert _gate(run_mod, tmp_path, base, fresh) is True
+    assert "ok" in capsys.readouterr().out
+
+
+def test_gate_catches_regression(run_mod, tmp_path, capsys):
+    base = {"bench_packed_decode": {"int8_tok_per_s": 400.0}}
+    fresh = {"bench_packed_decode": {"int8_tok_per_s": 100.0}}
+    run_mod.BASELINE_METRICS = {"bench_packed_decode": ["int8_tok_per_s"]}
+    assert _gate(run_mod, tmp_path, base, fresh) is False
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_gate_names_missing_metric(run_mod, tmp_path, capsys):
+    """The PR-7 bugfix: a baseline-gated metric absent from the fresh run
+    used to raise a bare KeyError from _lookup; now it fails the gate with
+    the metric named."""
+    base = {"bench_packed_decode": {"int8_tok_per_s": 400.0, "gone_metric": 1.0}}
+    fresh = {"bench_packed_decode": {"int8_tok_per_s": 500.0}}
+    run_mod.BASELINE_METRICS = {"bench_packed_decode": ["int8_tok_per_s"]}
+    assert _gate(run_mod, tmp_path, base, fresh) is False
+    out = capsys.readouterr().out
+    assert "bench_packed_decode.gone_metric MISSING" in out
+
+
+def test_gate_names_missing_nested_metric(run_mod, tmp_path, capsys):
+    """Slash-path metrics ("table/metric") hit _lookup's nested indexing —
+    a missing intermediate must be named too, not TypeError out."""
+    base = {"kernel_vusa_packed": {"sparsity_0.85/kernel_speedup": 1.5}}
+    fresh = {"kernel_vusa_packed": {"sparsity_0.85": 3.0}}  # not a dict
+    run_mod.BASELINE_METRICS = {}
+    assert _gate(run_mod, tmp_path, base, fresh) is False
+    assert "kernel_vusa_packed.sparsity_0.85/kernel_speedup MISSING" in (
+        capsys.readouterr().out
+    )
+
+
+def test_gate_names_bench_that_did_not_run(run_mod, tmp_path, capsys):
+    base = {"bench_faults": {"goodput_ratio": 0.9}}
+    run_mod.BASELINE_METRICS = {}
+    assert _gate(run_mod, tmp_path, base, {}) is False
+    assert "bench_faults MISSING" in capsys.readouterr().out
+
+
+def test_gate_names_unprotected_declared_metric(run_mod, tmp_path, capsys):
+    """A metric declared in BASELINE_METRICS but absent from the committed
+    baseline would ship unprotected — the gate flags it per metric."""
+    base = {"bench_packed_decode": {"int8_tok_per_s": 400.0}}
+    fresh = {"bench_packed_decode": {"int8_tok_per_s": 500.0, "int4_tok_per_s": 500.0}}
+    run_mod.BASELINE_METRICS = {
+        "bench_packed_decode": ["int8_tok_per_s", "int4_tok_per_s"]
+    }
+    assert _gate(run_mod, tmp_path, base, fresh) is False
+    assert "bench_packed_decode.int4_tok_per_s UNGATED" in capsys.readouterr().out
+
+
+def test_committed_baseline_covers_declared_metrics(run_mod):
+    """The repo's own BENCH_BASELINE.json must gate exactly what
+    BASELINE_METRICS declares (the inverse check makes extra declared
+    metrics fail CI, so catch the drift here first)."""
+    committed = json.loads((_RUN_PY.parent.parent / "BENCH_BASELINE.json").read_text())
+    for name, metrics in run_mod.BASELINE_METRICS.items():
+        assert name in committed, f"{name} declared but not in BENCH_BASELINE.json"
+        for m in metrics:
+            assert m in committed[name], f"{name}.{m} declared but not gated"
+
+
+def test_summary_md_table(run_mod, tmp_path):
+    base = {
+        "bench_packed_decode": {"int8_tok_per_s": 400.0, "gone_metric": 1.0},
+        "bench_faults": {"goodput_ratio": 0.9},
+    }
+    fresh = {"bench_packed_decode": {"int8_tok_per_s": 500.0}}
+    run_mod.BASELINE_METRICS = {}
+    _gate(run_mod, tmp_path, base, fresh)
+    out = tmp_path / "summary.md"
+    run_mod.write_summary_md(str(out))
+    text = out.read_text()
+    lines = text.splitlines()
+    assert "| bench | metric | baseline | fresh | delta | status |" in lines
+    # fresh-vs-baseline row with the delta percentage rendered
+    assert any(
+        "int8_tok_per_s" in ln and "400.000" in ln and "500.000" in ln
+        and "+25.0%" in ln and "ok" in ln
+        for ln in lines
+    )
+    assert any("gone_metric" in ln and "MISSING" in ln for ln in lines)
+    assert any("bench_faults" in ln and "MISSING" in ln for ln in lines)
+    # every table row keeps the 6-column shape (renders as a GFM table)
+    for ln in lines:
+        if ln.startswith("|"):
+            assert ln.count("|") == 7, ln
+
+
+def test_summary_md_empty(run_mod, tmp_path):
+    run_mod.GATE_ROWS.clear()
+    out = tmp_path / "summary.md"
+    run_mod.write_summary_md(str(out))
+    assert "no gated benches ran" in out.read_text()

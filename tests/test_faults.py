@@ -9,6 +9,7 @@ tokens bit-identical to a clean dense run (the VUSA property: a dense path
 exists for every packed weight), and the bounded retry never loops."""
 
 import dataclasses
+import os
 
 import numpy as np
 import pytest
@@ -208,8 +209,13 @@ def test_admission_stall_injection(llama):
     assert sched.stats()["admit_s"] >= 0.05
 
 
+# the nightly workflow widens the sweep (REPRO_CHAOS_SEEDS=0,1,...,7); the
+# default 3 seeds keep the slow CI leg bounded
+_CHAOS_SEEDS = [int(s) for s in os.environ.get("REPRO_CHAOS_SEEDS", "0,1,2").split(",")]
+
+
 @pytest.mark.slow
-@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("seed", _CHAOS_SEEDS)
 def test_chaos_sweep_no_corrupt_ok(llama, seed):
     """Full sweep: at a 30% seeded cache-fault rate, every completion is
     either OK or FAILED_FALLBACK_OK and every delivered token sequence is

@@ -11,13 +11,20 @@ import numpy as np
 from hypothesis_compat import given, settings, st
 
 from repro.core.packing import (
+    QMAX,
+    dequantize_rows,
+    nm_mask,
     pack_blocks,
     pack_exact,
+    pack_nibbles,
     pack_rows,
+    pack_rows_nm,
     pack_rows_t,
+    quantize_rows,
     shard_windows,
     unpack_blocks,
     unpack_exact,
+    unpack_nibbles,
     unpack_rows,
 )
 
@@ -162,3 +169,179 @@ def test_pack_exact_roundtrip():
     w = _sparse(4, 9, 12, 0.6)
     p = pack_exact(w, N=3, M=6, A=3)
     np.testing.assert_array_equal(unpack_exact(p), w)
+
+
+# ---------------------------------------------------------------------------
+# quantized row packs (DESIGN.md §10): int8 / int4-nibble values + scales
+# ---------------------------------------------------------------------------
+
+
+def _assert_quant_roundtrip(w, m, a, value_dtype):
+    """quantize -> (nibble-pack) -> dequantize stays within the scale quantum
+    of the original pack, positions survive exactly, zeros stay exact."""
+    p = pack_rows(w, m=m, a=a)
+    q = quantize_rows(p, value_dtype)
+    assert q.value_dtype == value_dtype
+    assert q.values.dtype == np.int8
+    assert q.scales.dtype == np.float32
+    assert q.scales.shape == p.values.shape[:2]
+    assert np.isfinite(q.scales).all() and (q.scales > 0).all()
+    d = dequantize_rows(q)
+    s = p.values.shape[2]
+    # positions: original prefix intact; int4 may append one -1 idle pad slot
+    np.testing.assert_array_equal(d.row_positions[:, :, :s], p.row_positions)
+    assert (d.row_positions[:, :, s:] == -1).all()
+    # rint quantization error is at most half a quantum per element
+    err = np.abs(d.values[:, :, :s] - p.values)
+    quantum = q.scales[:, :, None] * 0.5
+    assert (err <= quantum + 1e-6).all()
+    assert (d.values[:, :, s:] == 0).all()
+    # exact zeros quantize to exact zeros (idle slots stay silent)
+    assert (d.values[:, :, :s][p.values == 0] == 0).all()
+    # the full pipeline stays within quantum of the dense matrix too
+    np.testing.assert_allclose(
+        unpack_rows(d), w, atol=float(q.scales.max()) * 0.5 + 1e-6
+    )
+
+
+@given(
+    k=st.integers(1, 32),
+    c=st.integers(1, 200),
+    m=st.sampled_from([8, 32, 128]),
+    a=st.sampled_from([4, 8, 16]),
+    sp=st.floats(0.0, 1.0),
+    dt=st.sampled_from(["int8", "int4"]),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=40, deadline=None)
+def test_quantize_rows_roundtrip_prop(k, c, m, a, sp, dt, seed):
+    w = _sparse(seed, k, c, sp) if sp < 1.0 else np.zeros((k, c), np.float32)
+    _assert_quant_roundtrip(w, m, a, dt)
+
+
+@given(
+    shape=st.sampled_from([(4,), (2, 6), (3, 5, 8), (1, 2)]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=30, deadline=None)
+def test_nibble_codec_exact_prop(shape, seed):
+    """pack_nibbles/unpack_nibbles is a lossless codec over the int4 range."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-QMAX["int4"], QMAX["int4"] + 1, size=shape).astype(np.int8)
+    b = pack_nibbles(q)
+    assert b.dtype == np.int8
+    assert b.shape == shape[:-1] + (shape[-1] // 2,)
+    np.testing.assert_array_equal(unpack_nibbles(b), q)
+
+
+@given(
+    dt=st.sampled_from(["int8", "int4"]),
+    k=st.integers(1, 16),
+    c=st.integers(1, 96),
+    sp=st.floats(0.0, 0.99),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=30, deadline=None)
+def test_quantize_idempotent_prop(dt, k, c, sp, seed):
+    """Quantizing a dequantized pack reproduces the same bytes and scales:
+    the max-|v| entry maps to exactly +-qmax*scale, so the scale recomputes
+    bit-identically and every grid point is a fixed point of rint."""
+    p = pack_rows(_sparse(seed, k, c, sp), m=32, a=8)
+    q1 = quantize_rows(p, dt)
+    q2 = quantize_rows(dequantize_rows(q1), dt)
+    np.testing.assert_array_equal(q1.values, q2.values)
+    np.testing.assert_array_equal(q1.scales, q2.scales)
+
+
+# --- always-run quantized edges ---
+
+
+def test_quantize_rows_edges():
+    for k, c, m, a, sp, dt in [
+        (1, 1, 128, 16, 0.0, "int8"),  # single scalar
+        (1, 1, 128, 16, 0.0, "int4"),
+        (7, 130, 128, 16, 0.85, "int8"),  # c % m != 0
+        (7, 130, 128, 16, 0.85, "int4"),
+        (3, 64, 32, 8, 1.0, "int8"),  # fully zero
+        (5, 96, 32, 4, 0.5, "int4"),  # odd slot count forces nibble padding
+    ]:
+        w = _sparse(0, k, c, sp) if sp < 1.0 else np.zeros((k, c), np.float32)
+        _assert_quant_roundtrip(w, m, a, dt)
+
+
+def test_quantize_all_zero_window_scale_is_one():
+    """A window with no live values must still carry a finite positive scale
+    (1.0 by convention) so kernel dequant never divides/multiplies by 0."""
+    w = np.zeros((4, 64), np.float32)
+    w[:, 32:] = _sparse(1, 4, 32, 0.5)  # window 0 all-zero, window 1 live
+    q = quantize_rows(pack_rows(w, m=32, a=4), "int8")
+    assert (q.scales[0] == 1.0).all()
+    assert (q.values[0] == 0).all()
+    d = dequantize_rows(q)
+    assert (d.values[0] == 0).all()
+
+
+def test_nibble_codec_edges():
+    # full int4 two's-complement range [-8, 7] survives, not just [-7, 7]
+    q = np.arange(-8, 8, dtype=np.int8).reshape(2, 8)
+    np.testing.assert_array_equal(unpack_nibbles(pack_nibbles(q)), q)
+    # odd last dim must refuse, not silently truncate
+    try:
+        pack_nibbles(np.zeros((2, 3), np.int8))
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("pack_nibbles on odd last dim must raise")
+
+
+def test_int4_slot_padding_even():
+    """int4 packs always hold an even slot count: a=4 with max-nnz forcing an
+    odd multiple would break nibble pairing, so quantize_rows pads one idle
+    slot (value 0, position -1) before packing nibbles."""
+    rng = np.random.default_rng(7)
+    w = (rng.normal(size=(3, 32)) * (rng.random((3, 32)) < 0.4)).astype(np.float32)
+    p = pack_rows(w, m=32, a=1)  # a=1 lets slot counts go odd
+    q = quantize_rows(p, "int4")
+    assert q.row_positions.shape[2] % 2 == 0
+    assert q.values.shape[2] * 2 == q.row_positions.shape[2]
+    np.testing.assert_allclose(
+        unpack_rows(dequantize_rows(q)), w, atol=float(q.scales.max()) * 0.5 + 1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# N:M structured pack (S2TA DBB comparison arm)
+# ---------------------------------------------------------------------------
+
+
+def test_nm_mask_block_budget():
+    w = _sparse(6, 8, 64, 0.0)  # dense input: every block must be cut to n
+    for n, block in [(2, 4), (1, 4), (4, 8)]:
+        mask = nm_mask(w, n=n, block=block)
+        assert mask.shape == w.shape
+        nnz = mask.reshape(8, -1, block).sum(axis=2)
+        assert (nnz <= n).all()
+        # kept entries are the top-|.| of each block
+        kept = np.abs(np.where(mask, w, 0.0)).reshape(8, -1, block)
+        dropped = np.abs(np.where(mask, 0.0, w)).reshape(8, -1, block)
+        assert (kept.min(axis=2, initial=np.inf, where=kept > 0)
+                >= dropped.max(axis=2, initial=0.0) - 1e-7).all()
+
+
+def test_nm_mask_partial_trailing_block():
+    w = _sparse(7, 4, 10, 0.0)  # 10 % 4 != 0: trailing partial block kept
+    mask = nm_mask(w, n=2, block=4)
+    assert (mask[:, 8:] == (w[:, 8:] != 0)).all()
+    assert (mask[:, :8].reshape(4, 2, 4).sum(axis=2) <= 2).all()
+
+
+def test_pack_rows_nm_slot_bound():
+    """The N:M pack's slot count obeys the structural bound n*ceil(m/block)
+    and unpacks to exactly the masked matrix."""
+    w = _sparse(8, 12, 160, 0.0)
+    n, block, m = 2, 4, 32
+    p = pack_rows_nm(w, n=n, block=block, m=m, a=4)
+    assert p.values.shape[2] <= -(-(n * -(-m // block)) // 4) * 4
+    np.testing.assert_array_equal(
+        unpack_rows(p), np.where(nm_mask(w, n, block), w, 0.0)
+    )
