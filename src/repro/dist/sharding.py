@@ -37,6 +37,7 @@ __all__ = [
     "batch_shardings",
     "serve_shardings",
     "window_sharding",
+    "block_sharding",
 ]
 
 
@@ -185,4 +186,21 @@ def window_sharding(mesh, n_windows: int, ndim: int, axis: int = 0) -> NamedShar
     parts = [None] * ndim
     if "model" in mesh.shape and _divisible(n_windows, mesh, ("model",)):
         parts[axis] = "model"
+    return NamedSharding(mesh, PartitionSpec(*parts))
+
+
+def block_sharding(mesh, n_blocks: int, ndim: int, axis: int = 1) -> NamedSharding:
+    """Sharding for a paged-arena leaf along its block axis (DESIGN.md §11).
+
+    Blocks are the paged pool's batch dim — the arena ``(L, n_blocks, page,
+    ...)`` shards its block axis over the data-parallel mesh axes exactly as
+    the slot pool sharded its leading slots axis, so KV bytes keep scaling
+    out with DP after the paged refactor.  Per-slot block-table gathers and
+    token scatters cross shard boundaries; GSPMD inserts the collectives.
+    Usual fallback contract: an absent/size-1 DP axis or an indivisible
+    block count replicates instead of erroring."""
+    axes = _batch_axes(mesh)
+    parts = [None] * ndim
+    if axes and _divisible(n_blocks, mesh, axes):
+        parts[axis] = axes if len(axes) > 1 else axes[0]
     return NamedSharding(mesh, PartitionSpec(*parts))

@@ -72,6 +72,27 @@ def main():
         help="chaos mode: seeded fraction of requests whose slot cache gets "
         "NaN-poisoned at admission (exercises guard + dense fallback)",
     )
+    ap.add_argument(
+        "--page-size", type=int, default=0,
+        help="KV block size in tokens; >0 switches the scheduler to the paged "
+        "arena pool with prefix sharing (DESIGN.md §11), 0 = slot pool",
+    )
+    ap.add_argument(
+        "--arena-blocks", type=int, default=0,
+        help="total paged-arena blocks (0 = auto: enough for every slot at "
+        "max_len); smaller arenas admit lazily and preempt under pressure",
+    )
+    ap.add_argument(
+        "--prefix-cache", action=argparse.BooleanOptionalAction, default=True,
+        help="share identical prompt-prefix pages between requests "
+        "(--no-prefix-cache disables; only meaningful with --page-size)",
+    )
+    ap.add_argument(
+        "--prefill-chunk", type=int, default=0,
+        help="chunk long prompt prefills to this many tokens and co-schedule "
+        "the chunks with decode segments (0 = whole-prompt prefill; "
+        "requires --page-size)",
+    )
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -92,9 +113,16 @@ def main():
         mesh = make_serve_mesh(args.mesh)
         print(f"mesh {dict(mesh.shape)} over {len(mesh.devices.flat)} devices")
     faults = FaultConfig(cache_nan_rate=args.fault_rate) if args.fault_rate > 0 else None
-    eng = Engine(cfg, params, ServeConfig(max_len=args.prompt_len + args.max_new + 8,
+    max_len = args.prompt_len + args.max_new + 8
+    if args.page_size > 0:  # §11: page size must divide max_len
+        max_len = -(-max_len // args.page_size) * args.page_size
+    eng = Engine(cfg, params, ServeConfig(max_len=max_len,
                                           packed_weights=args.packed,
                                           packed_values=args.packed_values,
+                                          page_size=args.page_size,
+                                          arena_blocks=args.arena_blocks,
+                                          prefix_cache=args.prefix_cache,
+                                          prefill_chunk=args.prefill_chunk,
                                           faults=faults),
                  mesh=mesh)
     if args.requests > 0:
@@ -118,6 +146,13 @@ def main():
             ("rejected", "shed", "timed_out", "cancelled", "fallback", "failed",
              "quarantined")
         ))
+        if args.page_size > 0:
+            print(f"  arena {st['kv_pool_bytes']/2**20:.1f}MiB "
+                  f"blocks live={st['blocks_live']:.0f} free={st['blocks_free']:.0f} "
+                  f"cached={st['blocks_cached']:.0f}  "
+                  f"prefix hit rate {st['prefix_hit_rate']:.2f}  "
+                  f"cow={st['cow_copies']}  preempted={st['preempted']}  "
+                  f"hbm/req {st['hbm_bytes_per_active_request']/2**10:.1f}KiB")
         bad = sum(1 for c in done.values() if c.status.value not in ("OK", "FAILED_FALLBACK_OK"))
         if bad:
             print(f"  {bad} requests did not deliver tokens")

@@ -11,12 +11,25 @@ trees defined by :mod:`repro.models.families` (every family's
 
 All helpers preserve leaf dtypes (e.g. the hybrid family's fp32 ``h`` state
 next to bf16 KV rings) and never assume a particular tree structure.
+
+The second half of this module is the **paged pool** (DESIGN.md §11): fixed
+``page``-row KV blocks in a shared arena, per-slot block tables, a host-side
+:class:`BlockAllocator` with prefix-hash sharing (refcounts, cached-free
+reuse, copy-on-write at the divergence boundary).  Only KV-shaped cache
+families (leaves ``(L, 1, max_len, ...)`` plus a scalar ``pos``) can be
+paged — recurrent families (SSM conv/state, RG-LRU) keep the dense per-slot
+pool above, which stays fully supported.
 """
 
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "init_slot_cache",
@@ -28,6 +41,26 @@ __all__ = [
     "reset_slot",
     "slot_count",
     "slot_shardings",
+    # paged pool (DESIGN.md §11)
+    "PagedLayout",
+    "BlockAllocator",
+    "paged_seq_len",
+    "init_paged_pool",
+    "paged_view",
+    "paged_in_axes",
+    "paged_scatter_token",
+    "write_prefill_pages",
+    "bind_slot_pages",
+    "zero_blocks",
+    "copy_block",
+    "paged_read_slot",
+    "paged_reset_slot",
+    "paged_poison_block",
+    "paged_shardings",
+    "paged_pool_bytes",
+    "paged_block_bytes",
+    "prefix_page_digests",
+    "prefix_tail_digests",
 ]
 
 
@@ -67,15 +100,19 @@ def batch_axes(specs_b1, specs_b2):
     position per leaf (e.g. axis 1 under a leading ``layers`` axis) — without
     hardcoding any family's tree structure."""
 
-    def one(s1, s2):
+    def one(path, s1, s2):
         diffs = [i for i, (a, b) in enumerate(zip(s1.shape, s2.shape)) if a != b]
         if not diffs:
             return -1
         if len(diffs) != 1:
-            raise ValueError(f"ambiguous batch axis: {s1.shape} vs {s2.shape}")
+            raise ValueError(
+                f"ambiguous batch axis at cache leaf "
+                f"{jax.tree_util.keystr(path) or '<root>'}: "
+                f"axes {diffs} all change between {s1.shape} and {s2.shape}"
+            )
         return diffs[0]
 
-    return jax.tree_util.tree_map(one, specs_b1, specs_b2)
+    return jax.tree_util.tree_map_with_path(one, specs_b1, specs_b2)
 
 
 def write_slots(slot_cache, idx, batched_cache, axes, pos):
@@ -141,3 +178,494 @@ def reset_slot(slot_cache, i: int):
     return jax.tree_util.tree_map(
         lambda leaf: leaf.at[i].set(jnp.zeros(leaf.shape[1:], leaf.dtype)), slot_cache
     )
+
+
+# ==========================================================================
+# Paged pool (DESIGN.md §11)
+#
+# Device state (``pstate``) is a plain pytree:
+#
+#   {"arena": {"k": (L, n_blocks, page, kvh, hd), "v": ...},   # shared blocks
+#    "table": (slots, n_pages) int32,                          # block tables
+#    "pos":   (slots,) int32}                                  # per-slot pos
+#
+# Block id space: block 0 is the *null* block (permanently zero; nothing
+# ever writes it), blocks 1..slots are per-slot *scratch* blocks that absorb
+# the drifting writes of free slots riding along in the vmapped segment, and
+# blocks ``slots+1..n_blocks-1`` are the user pool managed by the host-side
+# BlockAllocator.  ``n_blocks`` itself is the out-of-bounds sentinel: every
+# scatter here uses ``mode="drop"``, so an entry of ``n_blocks`` is a no-op.
+#
+# Bit-parity contract: ``page`` must divide ``max_len``, so a slot's gathered
+# view ``arena[table_row]`` reshapes to exactly the (1, max_len, ...) cache
+# the slot pool holds.  Unwritten gathered rows are masked by the same
+# ``slots <= pos`` validity the slot pool uses; they contribute exactly-zero
+# probability as long as they are *finite*, which the zero-on-free /
+# scrub-on-realloc discipline below guarantees.
+# ==========================================================================
+
+
+@dataclass(frozen=True)
+class PagedLayout:
+    """Static geometry of a paged pool."""
+
+    slots: int
+    page: int
+    n_pages: int  # block-table width = max_len // page
+    n_blocks: int  # total arena blocks, incl. null + scratch
+
+    @classmethod
+    def build(cls, slots: int, max_len: int, page: int, blocks: int = 0):
+        if page <= 0 or max_len % page:
+            raise ValueError(
+                f"page_size {page} must be positive and divide max_len {max_len} "
+                "(the gathered block view must equal the slot-pool cache shape "
+                "for bit-parity, DESIGN.md §11)"
+            )
+        n_pages = max_len // page
+        user = blocks if blocks > 0 else slots * n_pages
+        return cls(slots=slots, page=page, n_pages=n_pages,
+                   n_blocks=1 + slots + user)
+
+    @property
+    def null_block(self) -> int:
+        return 0
+
+    def scratch_block(self, slot: int) -> int:
+        return 1 + slot
+
+    @property
+    def reserved(self) -> int:
+        return 1 + self.slots
+
+    @property
+    def user_blocks(self) -> int:
+        return self.n_blocks - self.reserved
+
+    @property
+    def oob(self) -> int:
+        # out-of-range sentinel for mode="drop" scatters / unmapped table slots
+        return self.n_blocks
+
+
+def paged_seq_len(cache_specs):
+    """Return the common sequence length ``max_len`` if ``cache_specs`` is a
+    KV-shaped family (every non-scalar leaf ``(L, 1, S, ...)`` with one
+    shared ``S``, plus a scalar ``pos``), else None — the predicate gating
+    paged serving.  Recurrent families (hybrid conv/h state, SSM) fail it
+    and keep the dense per-slot pool."""
+    if not isinstance(cache_specs, dict) or "pos" not in cache_specs:
+        return None
+    seq = None
+    for name, s in cache_specs.items():
+        if name == "pos":
+            if s.shape != ():
+                return None
+            continue
+        if s.ndim < 3 or s.shape[1] != 1:
+            return None
+        if seq is None:
+            seq = s.shape[2]
+        elif s.shape[2] != seq:
+            return None
+    return seq
+
+
+def init_paged_pool(cache_specs, layout: PagedLayout):
+    """Zero arena + scratch-pointing tables.  Every table entry starts at the
+    slot's own scratch block so free slots' drifting decode writes land in
+    private scratch, never in user blocks."""
+    arena = {
+        name: jnp.zeros(
+            (s.shape[0], layout.n_blocks, layout.page) + s.shape[3:], s.dtype
+        )
+        for name, s in cache_specs.items()
+        if name != "pos"
+    }
+    scratch = 1 + jnp.arange(layout.slots, dtype=jnp.int32)
+    table = jnp.broadcast_to(scratch[:, None], (layout.slots, layout.n_pages))
+    return {
+        "arena": arena,
+        "table": table.astype(jnp.int32),
+        "pos": jnp.zeros((layout.slots,), jnp.int32),
+    }
+
+
+def paged_view(pstate):
+    """Per-slot cache tree for the vmapped decode step: arena leaves are
+    shared (vmap constants), ``table``/``pos`` carry the slots axis.  The
+    layer scan inside the family step slices the leading L axis off the
+    arena leaves, handing attention the per-layer paged cache
+    ``{"k": (n_blocks, page, kvh, hd), ..., "table": (n_pages,), "pos": ()}``."""
+    return {**pstate["arena"], "table": pstate["table"], "pos": pstate["pos"]}
+
+
+def paged_in_axes(pstate):
+    """vmap in_axes tree matching :func:`paged_view`."""
+    return {**{k: None for k in pstate["arena"]}, "table": 0, "pos": 0}
+
+
+def paged_scatter_token(pstate, new_rows):
+    """Scatter one decoded KV row per slot into the arena — the write half of
+    the decode step, hoisted *outside* the slot vmap so the shared arena is
+    updated once per step.  ``new_rows`` holds, per arena leaf ``name``, a
+    ``f"{name}_new"`` entry of shape ``(slots, L, 1, 1, ...)`` (the vmapped
+    pending-write stacks the decode step returns); the row for
+    slot ``i`` lands at block ``table[i, pos_i // page]``, offset
+    ``pos_i % page``.  Distinct slots always target distinct blocks (the
+    allocator never maps one user block writable into two tables, and
+    scratch blocks are per-slot), so the scatter is conflict-free."""
+    table, pos = pstate["table"], pstate["pos"]
+    n_pages = table.shape[1]
+    pg = jnp.clip(pos // _page_of(pstate), 0, n_pages - 1)
+    blk = jnp.take_along_axis(table, pg[:, None], axis=1)[:, 0]  # (slots,)
+    off = pos % _page_of(pstate)
+    arena = {}
+    for name, a in pstate["arena"].items():
+        rows = jnp.moveaxis(new_rows[name + "_new"][:, :, 0, 0], 0, 1)  # (L, slots, ...)
+        arena[name] = a.at[:, blk, off].set(rows.astype(a.dtype), mode="drop")
+    return {"arena": arena, "table": table, "pos": pos + 1}
+
+
+def _page_of(pstate) -> int:
+    return next(iter(pstate["arena"].values())).shape[2]
+
+
+def write_prefill_pages(arena, page_tables, primed):
+    """Scatter a primed contiguous cache (B=N, leaves ``(L, N, S_b, ...)``)
+    into arena blocks: sequence rows regroup into ``ceil(S_b/page)`` pages
+    per row, page ``p`` of batch row ``r`` lands in block
+    ``page_tables[r, p]``.  Sentinel (out-of-range) entries drop — that is
+    how batch-bucket padding rows, pages beyond a short prompt, and
+    prefix-shared pages (already resident, must not be rewritten) are all
+    skipped with one mechanism."""
+    page = next(iter(arena.values())).shape[2]
+    out = {}
+    for name, a in arena.items():
+        sub = primed[name]
+        pad = (-sub.shape[2]) % page
+        if pad:
+            sub = jnp.pad(sub, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (sub.ndim - 3))
+        pages = sub.reshape(
+            sub.shape[0], sub.shape[1], sub.shape[2] // page, page, *sub.shape[3:]
+        )
+        out[name] = a.at[:, page_tables].set(pages.astype(a.dtype), mode="drop")
+    return out
+
+
+def bind_slot_pages(table, pos, idx, rows, lengths):
+    """Point admitted slots at their blocks: write full table rows ``rows``
+    ``(N, n_pages)`` and positions ``lengths`` ``(N,)`` at slot indices
+    ``idx`` (out-of-range = padding, dropped)."""
+    return (
+        table.at[idx].set(rows.astype(table.dtype), mode="drop"),
+        pos.at[idx].set(lengths.astype(pos.dtype), mode="drop"),
+    )
+
+
+def zero_blocks(arena, ids):
+    """Zero arena blocks ``ids`` (a fixed-width int32 vector; out-of-range
+    entries are no-ops).  Load-bearing for both parity and fault containment:
+    a freed block re-entering circulation must read as zeros (masked-row
+    garbage stays finite) and must not leak a quarantined request's NaN
+    poison to the next owner."""
+    return {
+        name: a.at[:, ids].set(jnp.zeros((), a.dtype), mode="drop")
+        for name, a in arena.items()
+    }
+
+
+def copy_block(arena, src, dst):
+    """Copy-on-write: duplicate block ``src`` into ``dst`` byte-for-byte.
+    Used at the prefix divergence boundary — the sharer keeps reading the
+    original, the new request writes its divergent rows into the private
+    copy — and to privatize a block before fault injection so poison never
+    reaches shared state."""
+    return {name: a.at[:, dst].set(a[:, src]) for name, a in arena.items()}
+
+
+def paged_read_slot(pstate, i, max_len: int):
+    """Materialize slot ``i`` as a dense per-slot (B=1) cache — the paged
+    twin of :func:`read_slot`, used by parity tests and debugging."""
+    row = pstate["table"][i]
+    out = {}
+    for name, a in pstate["arena"].items():
+        g = a[:, row]  # (L, n_pages, page, ...)
+        out[name] = g.reshape(a.shape[0], 1, -1, *a.shape[3:])[:, :, :max_len]
+    out["pos"] = pstate["pos"][i]
+    return out
+
+
+def paged_reset_slot(pstate, i, scratch_id):
+    """Detach slot ``i``: table row back to its scratch block, pos to 0.
+    Freeing/zeroing the blocks the row pointed at is the allocator's call
+    (shared blocks may have other readers) — see Scheduler retirement."""
+    table = pstate["table"].at[i].set(
+        jnp.full((pstate["table"].shape[1],), scratch_id, jnp.int32)
+    )
+    return {"arena": pstate["arena"], "table": table, "pos": pstate["pos"].at[i].set(0)}
+
+
+def paged_poison_block(arena, blk, value=jnp.nan):
+    """Paged fault injection: NaN element ``(layer 0, blk, 0, ..., 0)`` of
+    every inexact arena leaf — the §9 ``poison_slot`` ported to the paged
+    layout.  Callers must pass a *private* block of the target slot (COW
+    guarantees one exists) so the blast radius stays one request even under
+    prefix sharing."""
+    out = {}
+    for name, a in arena.items():
+        if jnp.issubdtype(a.dtype, jnp.inexact):
+            idx = (0, blk) + (0,) * (a.ndim - 2)
+            out[name] = a.at[idx].set(jnp.asarray(value, a.dtype))
+        else:
+            out[name] = a
+    return out
+
+
+def paged_shardings(pstate, mesh):
+    """NamedSharding tree for a paged pool: the arena's *block* axis shards
+    over the data-parallel mesh axes (blocks are the paged pool's batch dim —
+    this is what scales KV bytes out with DP, the §8 story transposed to the
+    paged layout), block tables and positions shard over slots.  Same
+    degrade-to-replication contract as every rule in dist.sharding."""
+    from ..dist.sharding import batch_sharding, block_sharding
+
+    slots = pstate["pos"].shape[0]
+    return {
+        "arena": {
+            name: block_sharding(mesh, a.shape[1], a.ndim, axis=1)
+            for name, a in pstate["arena"].items()
+        },
+        "table": batch_sharding(mesh, slots, pstate["table"].ndim),
+        "pos": batch_sharding(mesh, slots, 1),
+    }
+
+
+def paged_pool_bytes(pstate) -> int:
+    """Total arena bytes (all blocks, live or not)."""
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in pstate["arena"].values())
+
+
+def paged_block_bytes(pstate) -> int:
+    """Bytes one block occupies across all arena leaves (all layers)."""
+    return sum(
+        int(np.prod(a.shape)) // a.shape[1] * a.dtype.itemsize
+        for a in pstate["arena"].values()
+    )
+
+
+# --------------------------------------------------------------------------
+# Host-side prefix hashing + block allocator
+# --------------------------------------------------------------------------
+
+
+def _chain(digest: bytes, tokens: np.ndarray) -> bytes:
+    return hashlib.blake2b(
+        digest + np.asarray(tokens, np.int32).tobytes(), digest_size=16
+    ).digest()
+
+
+def prefix_page_digests(tokens, page: int) -> list:
+    """Chained per-page digests of a prompt: ``h_p = H(h_{p-1} || page_p)``.
+    Chaining makes each digest position- and prefix-dependent, so equal
+    digests mean equal *full prefixes*, not just equal page contents.
+    Returns one digest per fully-covered page (``len(tokens) // page``);
+    the last digest (or ``b""``) seeds :func:`prefix_tail_digests`."""
+    tokens = np.asarray(tokens, np.int32)
+    out, h = [], b""
+    for p in range(len(tokens) // page):
+        h = _chain(h, tokens[p * page:(p + 1) * page])
+        out.append(h)
+    return out
+
+
+class BlockAllocator:
+    """Host-side bookkeeping for the user-block pool: free list, refcounts,
+    prefix-hash registry with a cached-free LRU (refcount-0 blocks whose
+    bytes are worth keeping for future prefix hits), and the COW registry
+    for partial tail pages.
+
+    Invariants (property-tested in tests/test_packing_props.py):
+      * every block is in exactly one of {free, cached, live};
+      * refcounts are >= 1 for live blocks and never go negative;
+      * ``alloc`` never returns a live or reserved block;
+      * blocks surfaced from the free list hold zeros (callers zero on free /
+        scrub on cached-eviction, as instructed by the return values here).
+    """
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        # pop() from the tail → ascending allocation order
+        self._free = list(range(layout.n_blocks - 1, layout.reserved - 1, -1))
+        self._ref: dict = {}
+        self._key_of: dict = {}  # blk -> registry key
+        self._blk_of: dict = {}  # registry key -> blk
+        self._tail_rows: dict = {}  # partial-tail key -> row count
+        self._cached: OrderedDict = OrderedDict()  # key -> blk, refcount-0, LRU
+        self.hits = 0
+        self.lookups = 0
+        self.cow_copies = 0
+        self.evictions = 0
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._cached)
+
+    @property
+    def live_blocks(self) -> int:
+        return len(self._ref)
+
+    @property
+    def available(self) -> int:
+        return len(self._free) + len(self._cached)
+
+    def refcount(self, blk: int) -> int:
+        return self._ref.get(blk, 0)
+
+    # -- alloc / free -------------------------------------------------------
+    def alloc(self, n: int):
+        """Take ``n`` fresh blocks (refcount 1).  Prefers the zeroed free
+        list, then evicts cached prefix blocks LRU-first.  Returns
+        ``(ids, scrub)`` where ``scrub`` lists evicted blocks the caller
+        must zero before use, or ``None`` if the pool cannot cover ``n``."""
+        if n > self.available:
+            return None
+        ids, scrub = [], []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:
+                key, b = self._cached.popitem(last=False)
+                self._unregister(b, key)
+                self.evictions += 1
+                scrub.append(b)
+            self._ref[b] = 1
+            ids.append(b)
+        return ids, scrub
+
+    def free(self, ids):
+        """Drop one reference per id.  Returns the blocks that fully died
+        *unhashed* — the caller must zero exactly those (hashed blocks keep
+        their bytes in the cached pool for future prefix hits)."""
+        dead = []
+        for b in ids:
+            r = self._ref.get(b, 0) - 1
+            if r < 0:
+                raise ValueError(f"refcount underflow freeing block {b}")
+            if r == 0:
+                del self._ref[b]
+                key = self._key_of.get(b)
+                if key is not None:
+                    self._cached[key] = b
+                else:
+                    self._free.append(b)
+                    dead.append(b)
+            else:
+                self._ref[b] = r
+        return dead
+
+    # -- prefix registry ----------------------------------------------------
+    def _unregister(self, blk, key=None):
+        key = self._key_of.pop(blk, None) or key
+        if key is not None:
+            self._blk_of.pop(key, None)
+            self._tail_rows.pop(key, None)
+            self._cached.pop(key, None)
+
+    def register_page(self, digest: bytes, blk: int) -> bool:
+        """Hash a fully-written prompt page.  First writer wins; a block can
+        carry at most one registration."""
+        key = ("F", digest)
+        if key in self._blk_of or blk in self._key_of:
+            return False
+        self._blk_of[key] = blk
+        self._key_of[blk] = key
+        return True
+
+    def register_tail(self, digest: bytes, blk: int, rows: int) -> bool:
+        """Hash a *partial* final prompt page (``rows`` valid rows) — the COW
+        seed: later prompts sharing those rows copy this block and write
+        their divergent rows into the copy."""
+        key = ("P", digest)
+        if key in self._blk_of or blk in self._key_of or rows <= 0:
+            return False
+        self._blk_of[key] = blk
+        self._key_of[blk] = key
+        self._tail_rows[key] = rows
+        return True
+
+    def match_pages(self, digests) -> list:
+        """Longest run of registered full-page digests; matched blocks gain
+        a reference (resurrecting cached blocks as needed)."""
+        ids = []
+        for d in digests:
+            self.lookups += 1
+            b = self._blk_of.get(("F", d))
+            if b is None:
+                break
+            self.hits += 1
+            self._retain(b, ("F", d))
+            ids.append(b)
+        return ids
+
+    def match_tail(self, digests):
+        """Longest registered partial-tail match among token-chain ``digests``
+        (index i = digest over the first i+1 tail tokens).  Returns
+        ``(blk, rows)`` for the COW source or None.  The source block is NOT
+        ref-bumped: the caller copies its bytes into a fresh block and the
+        two diverge immediately."""
+        best = None
+        for i, d in enumerate(digests):
+            key = ("P", d)
+            b = self._blk_of.get(key)
+            if b is not None and self._tail_rows.get(key) == i + 1:
+                best = (b, i + 1)
+        self.lookups += 1
+        if best is not None:
+            self.hits += 1
+            self.cow_copies += 1
+        return best
+
+    def _retain(self, blk, key):
+        if blk in self._ref:
+            self._ref[blk] += 1
+        else:
+            self._ref[blk] = 1
+            self._cached.pop(key, None)
+
+    def forget(self, blk: int):
+        """Drop a block's hash registration (without touching refcounts) —
+        used when its bytes stop being trustworthy (fault injection) so no
+        future prompt can match into it.  Returns blocks the caller must
+        zero (a cached block demoted to the plain free list)."""
+        key = self._key_of.get(blk)
+        if key is None:
+            return []
+        self._unregister(blk, key)
+        if blk not in self._ref:
+            # was parked in the cached pool: demote to plain free
+            self._free.append(blk)
+            return [blk]
+        return []
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else float("nan")
+
+
+def prefix_tail_digests(seed: bytes, tail_tokens) -> list:
+    """Token-wise chain digests of a prompt's partial final page, seeded by
+    the full-page chain digest: element ``i`` hashes the first ``i+1`` tail
+    tokens.  Probing every prefix of the tail against the allocator's
+    partial registry finds the longest COW match in O(page) hashes."""
+    out, h = [], seed
+    for t in np.asarray(tail_tokens, np.int32).ravel():
+        h = _chain(h, np.asarray([t], np.int32))
+        out.append(h)
+    return out

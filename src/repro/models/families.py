@@ -193,16 +193,28 @@ def _lm_decode_layer(lp, x, cache_l, cfg, pos):
         y, _ = moe(lp["ffn"], h, cfg)
     else:
         y = mlp(lp["ffn"], h)
+    if "k_new" in new_cache:  # paged: pending row writes, not a full cache
+        return x + y, {"k_new": new_cache["k_new"], "v_new": new_cache["v_new"]}
     return x + y, {"k": new_cache["k"], "v": new_cache["v"]}
 
 
 def lm_decode_step(params, token, cache, cfg):
-    """token: (B, 1) int32.  Returns (logits (B, 1, V), new cache)."""
+    """token: (B, 1) int32.  Returns (logits (B, 1, V), new cache).
+
+    ``cache`` may be the paged per-slot view (DESIGN.md §11): ``{"k"/"v":
+    (L, n_blocks, page, ...) arena leaves, "table": (n_pages,), "pos": ()}``.
+    The layer scan then slices the arena per layer exactly as it slices the
+    dense cache, and the returned tree carries the pending KV rows
+    (``k_new``/``v_new``, stacked (L, 1, 1, ...)) for the caller to scatter
+    into the shared arena — the step itself never writes arena state."""
     x = _embed_tokens(params, token, cfg)
     pos = cache["pos"]
+    table = cache.get("table")
 
     def body(x, layer_in):
         lp, cache_l = layer_in
+        if table is not None:
+            cache_l = {**cache_l, "table": table}
         x, new_c = _lm_decode_layer(lp, x, cache_l, cfg, pos)
         return x, new_c
 
@@ -210,6 +222,8 @@ def lm_decode_step(params, token, cache, cfg):
     x = rms_norm(x, params["final_norm"])
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if table is not None:
+        return logits, {**new_kv, "table": table, "pos": pos + 1}
     return logits, {**new_kv, "pos": pos + 1}
 
 
@@ -271,6 +285,62 @@ def lm_prefill(params, batch, cfg, max_len: int, lengths=None):
         last = jnp.take_along_axis(xf, idx, axis=1)[:, 0]
     logits = jnp.einsum("bd,dv->bv", last, head.astype(xf.dtype))
     return logits, cache
+
+
+def lm_prefill_chunk(params, tokens, cfg, arena, table_row, start, true_len,
+                     write_from):
+    """One chunk of a paged chunked prefill (Sarathi-style, DESIGN.md §11).
+
+    ``tokens`` (1, C) is a chunk of a single prompt whose first token sits at
+    absolute position ``start`` (traced — one compiled program per static C);
+    ``true_len`` counts real tokens (the final chunk is right-padded to C).
+    Each layer attends the chunk causally over everything resident in
+    ``table_row``'s blocks plus itself, then the chunk's KV rows scatter into
+    ``arena`` at block-table addresses.  Rows below ``write_from`` are
+    *not* written — prefix-shared pages are already resident and must stay
+    read-only (setting ``write_from = start + true_len`` turns the call into
+    a pure re-peek, e.g. recovering the first-token logits after a
+    fully-matched prefix hit without touching shared blocks).
+
+    Returns ``(logits (1, V), arena')`` — logits at the chunk's last real
+    token, meaningful on the final chunk only."""
+    from .layers import attention_chunk  # noqa: PLC0415
+
+    x = _embed_tokens(params, tokens, cfg)
+    c = x.shape[1]
+
+    def body(x, layer_in):
+        lp, ak, av = layer_in
+        h = rms_norm(x, lp["norm1"])
+        y, k_c, v_c = attention_chunk(
+            lp["attn"], h, cfg, ak, av, table_row, start, true_len
+        )
+        x = x + y
+        h = rms_norm(x, lp["norm2"])
+        if cfg.family == "moe":
+            y, _ = moe(lp["ffn"], h, cfg)
+        else:
+            y = mlp(lp["ffn"], h)
+        return x + y, (k_c, v_c)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], arena["k"], arena["v"]))
+    page, n_blocks = arena["k"].shape[2], arena["k"].shape[1]
+    rows = start + jnp.arange(c)  # absolute positions of chunk tokens
+    writable = (jnp.arange(c) < true_len) & (rows >= write_from)
+    pg = jnp.clip(rows // page, 0, table_row.shape[0] - 1)
+    blk = jnp.where(writable, table_row[pg], n_blocks)  # sentinel -> dropped
+    off = rows % page
+    new_arena = {}
+    for name, stacked in (("k", ks), ("v", vs)):
+        a = arena[name]
+        new_arena[name] = a.at[:, blk, off].set(
+            stacked[:, 0].astype(a.dtype), mode="drop"
+        )
+    xf = rms_norm(x, params["final_norm"])
+    last = xf[0, jnp.clip(true_len - 1, 0, c - 1)][None]  # (1, d)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", last, head.astype(xf.dtype))
+    return logits, new_arena
 
 
 # --------------------------------------------------------------------------

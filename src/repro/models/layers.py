@@ -523,15 +523,36 @@ def attention_decode(
     chunked: bool = False,  # True = paper-baseline flash scan (see DECODE_CHUNKED)
     wmm=None,  # optional weight-matmul override (see _project_qkv)
 ) -> tuple[jax.Array, dict]:
-    """Single-token decode against a (ring) KV cache."""
+    """Single-token decode against a (ring) KV cache.
+
+    The cache may also be *paged* (DESIGN.md §11): ``{"k": (n_blocks, page,
+    kvh, hd), "v": ..., "table": (n_pages,) int32, "pos": scalar}``.  The
+    block-table gather reconstructs exactly the contiguous ``(1, max_len,
+    ...)`` view the slot pool holds (``page`` divides ``max_len``), so from
+    here down the math — update slice, validity mask, attend — is the same
+    compiled program and tokens stay bit-identical.  Paged mode returns the
+    new K/V row as pending writes (``k_new``/``v_new``) instead of a full
+    cache: the caller scatters them into the shared arena outside its slot
+    vmap.  Ring caches (``window > 0``) are never paged — recurrent/local
+    families keep the dense per-slot pool."""
     b, _, d = x.shape
     nh, kvh, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
     pos = cache["pos"]  # scalar int32: number of tokens already in cache
-    s_max = cache["k"].shape[1]
+    paged = "table" in cache
+    if paged:
+        assert window == 0, "paged cache does not support ring/local attention"
+        table = cache["table"]  # (n_pages,) int32 block ids
+        kb, vb = cache["k"], cache["v"]  # (n_blocks, page, kvh, hd)
+        s_max = table.shape[0] * kb.shape[1]
+        k_cache = kb[table].reshape(1, s_max, *kb.shape[2:])
+        v_cache = vb[table].reshape(1, s_max, *vb.shape[2:])
+    else:
+        k_cache, v_cache = cache["k"], cache["v"]
+        s_max = k_cache.shape[1]
     q, k_new, v_new = _project_qkv(p, x, cfg, pos[None], wmm=wmm)
     slot = jnp.where(window > 0, pos % s_max, pos)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    k = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
     # absolute positions of each cache slot
     slots = jnp.arange(s_max)
     if window > 0:
@@ -554,7 +575,54 @@ def attention_decode(
         y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
     else:
         y = wmm("wo", out.reshape(b, 1, nh * hd)).astype(x.dtype)
+    if paged:
+        return y, {
+            "k_new": k_new.astype(cache["k"].dtype),
+            "v_new": v_new.astype(cache["v"].dtype),
+            "pos": pos + 1,
+        }
     return y, {"k": k, "v": v, "pos": pos + 1}
+
+
+def attention_chunk(
+    p: dict,
+    x: jax.Array,  # (1, C, d) — one prefill chunk of a single request
+    cfg,
+    arena_k: jax.Array,  # (n_blocks, page, kvh, hd)
+    arena_v: jax.Array,
+    table: jax.Array,  # (n_pages,) int32 — the request's block table
+    start: jax.Array,  # scalar int32: absolute position of the chunk's first token
+    true_len: jax.Array,  # scalar int32: real (non-padding) tokens in the chunk
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill attention (Sarathi-style, DESIGN.md §11): one chunk of
+    a long prompt attends causally over everything already resident in the
+    request's block table plus itself.  ``start`` is traced, so one compiled
+    program serves every chunk of every prompt at a given static ``C``.
+
+    The chunk's K/V splice into the gathered table view by *row index*
+    (padding rows past ``s_max`` drop) rather than a dynamic slice — a
+    clamped slice near the cache end would silently shift the write window.
+    Returns ``(y, k_chunk, v_chunk)``; the caller scatters the chunk rows
+    into the arena (masking padding and prefix-shared rows)."""
+    b, c, d = x.shape
+    nh, kvh, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    positions = start + jnp.arange(c)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    s_max = table.shape[0] * arena_k.shape[1]
+    k_all = arena_k[table].reshape(1, s_max, *arena_k.shape[2:])
+    v_all = arena_v[table].reshape(1, s_max, *arena_v.shape[2:])
+    k_all = k_all.at[:, positions].set(k_new.astype(k_all.dtype), mode="drop")
+    v_all = v_all.at[:, positions].set(v_new.astype(v_all.dtype), mode="drop")
+    rows = jnp.arange(s_max)
+    valid = rows < start + true_len
+    q = q.reshape(b, c, kvh, nh // kvh, hd)
+    out = _flash_attend(
+        q, k_all, v_all, MaskSpec("causal"), positions, rows,
+        kv_valid=valid, kv_chunk=min(512, s_max),
+    )
+    out = out.reshape(b, c, nh, hd)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+    return y, k_new, v_new
 
 
 def cross_attention(

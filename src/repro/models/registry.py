@@ -119,6 +119,32 @@ class Model:
 
         return read_slot(slot_cache, i)
 
+    # ---- paged pool (DESIGN.md §11) ----
+    def paged_seq_len(self, max_len: int):
+        """``max_len`` if this family's cache is KV-shaped and can be paged,
+        else None (recurrent families keep the dense per-slot pool)."""
+        from .cache import paged_seq_len
+
+        if self.cfg.family == "vlm":
+            return None  # patch-prefix rows complicate block addressing
+        return paged_seq_len(self.cache_specs(1, max_len))
+
+    def init_paged_pool(self, layout, max_len: int):
+        from .cache import init_paged_pool
+
+        return init_paged_pool(self.cache_specs(1, max_len), layout)
+
+    def prefill_chunk(self, params, tokens, arena, table_row, start, true_len,
+                      write_from):
+        """One chunk of a paged chunked prefill (LM families only)."""
+        fam = self.cfg.family
+        if fam in ("dense", "moe"):
+            return F.lm_prefill_chunk(
+                params, tokens, self.cfg, arena, table_row, start, true_len,
+                write_from,
+            )
+        raise NotImplementedError(f"chunked prefill for family {fam}")
+
     def decode_step(self, params, token, cache):
         fam = self.cfg.family
         if fam in ("dense", "moe", "vlm"):

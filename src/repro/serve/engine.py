@@ -56,6 +56,25 @@ class ServeConfig:
     # tuple = powers of two from 8 up to max_len.  One compiled prefill
     # program per (bucket, batch-bucket) serves any prompt length.
     prefill_buckets: tuple = ()
+    # paged KV pool (DESIGN.md §11): 0 = slot-stacked contiguous pool (the
+    # pre-§11 layout); > 0 = fixed-size blocks of this many rows in a shared
+    # arena with per-request block tables.  Must divide max_len (the gathered
+    # block view must equal the slot-pool cache shape for bit-parity).
+    page_size: int = 0
+    # share identical prompt prefixes between requests: full pages by
+    # refcounted block reuse, partial tail pages by copy-on-write.  Only
+    # meaningful with page_size > 0.
+    prefix_cache: bool = True
+    # arena capacity in user blocks; 0 = worst case (slots * max_len/page,
+    # no oversubscription).  Smaller values oversubscribe: admission checks
+    # the worst case per request, mid-flight exhaustion preempts.
+    arena_blocks: int = 0
+    # chunked prefill (Sarathi-style, DESIGN.md §11): > 0 = split prompts
+    # longer than this into chunks of this many tokens, co-scheduled with
+    # decode segments so a long admission never stalls decoding slots.
+    # Requires page_size > 0 and a page-multiple chunk.  0 = whole-prompt
+    # prefill (the pre-§11 behaviour).
+    prefill_chunk: int = 0
     # seeded fault-injection plan (DESIGN.md §9); None = no faults.  Pack
     # corruption is applied at Engine init (position flips before load
     # validation, value NaNs after); cache poisoning and admission stalls
@@ -75,6 +94,20 @@ class ServeConfig:
             raise ValueError(
                 f"packed_values must be 'bf16', 'int8' or 'int4', got {self.packed_values!r}"
             )
+        if self.page_size < 0 or (self.page_size and self.max_len % self.page_size):
+            raise ValueError(
+                f"page_size {self.page_size} must be 0 (slot pool) or divide "
+                f"max_len {self.max_len} (DESIGN.md §11 bit-parity contract)"
+            )
+        if self.prefill_chunk:
+            if not self.page_size:
+                raise ValueError("prefill_chunk requires page_size > 0 "
+                                 "(chunks write through block tables)")
+            if self.prefill_chunk % self.page_size:
+                raise ValueError(
+                    f"prefill_chunk {self.prefill_chunk} must be a multiple of "
+                    f"page_size {self.page_size}"
+                )
 
 
 class Engine:
@@ -144,6 +177,12 @@ class Engine:
             cfg.family == "moe" and cfg.moe_cf >= cfg.n_experts / cfg.top_k
         )
         self._prefill_masked = jax.jit(self._prefill_masked_fn) if batchable else None
+        # chunked-prefill entry for the paged pool (DESIGN.md §11): donates
+        # the arena; jax.jit re-specializes per static chunk length, so one
+        # wrapper serves every configured chunk/bucket size
+        self._chunk = (
+            jax.jit(self._chunk_fn, donate_argnums=(2,)) if batchable else None
+        )
         self._buckets = self._make_buckets(sc)
 
     # -- mesh helpers ---------------------------------------------------------
@@ -277,6 +316,12 @@ class Engine:
         nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)[:, None].astype(jnp.int32)
         return nxt, cache
 
+    def _chunk_fn(self, params, tokens, arena, table_row, start, true_len, write_from):
+        with self._mesh_ctx():
+            return self.model.prefill_chunk(
+                params, tokens, arena, table_row, start, true_len, write_from
+            )
+
     # -- prompt-length buckets -------------------------------------------------
     @staticmethod
     def _make_buckets(sc: ServeConfig):
@@ -305,6 +350,28 @@ class Engine:
     def batched_prefill(self) -> bool:
         """True when the family supports one-dispatch bucketed admission."""
         return self._prefill_masked is not None
+
+    @property
+    def paged_supported(self) -> bool:
+        """True when the family can serve from a paged KV pool (DESIGN.md
+        §11): a KV-shaped cache *and* batching-exact prefill (dense, or
+        dropless moe — the same condition as bucketed admission, because
+        prefix-suffix recompute and chunking re-batch prompt tokens).
+        Recurrent/vlm families silently keep the dense per-slot pool."""
+        return (
+            self._prefill_masked is not None
+            and self.model.paged_seq_len(self.sc.max_len) is not None
+        )
+
+    def prefill_chunk(self, tokens, arena, table_row, start, true_len, write_from):
+        """One chunk of a paged chunked prefill (B=1): see
+        ``families.lm_prefill_chunk``.  Donates ``arena``; returns
+        ``(logits (1, V), arena')``."""
+        self._validate_tokens(tokens)
+        return self._chunk(
+            self.params, jnp.asarray(tokens, jnp.int32), arena, table_row,
+            jnp.int32(start), jnp.int32(true_len), jnp.int32(write_from),
+        )
 
     def bucket_len(self, n: int) -> int:
         """Smallest configured bucket >= n (the bucket set always covers

@@ -481,6 +481,9 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
 
     x = F._embed_tokens(params, token, cfg)
     pos = cache["pos"]
+    # paged per-slot view (DESIGN.md §11): same contract as lm_decode_step —
+    # arena leaves scan per layer, the step returns pending k_new/v_new rows
+    table = cache.get("table")
 
     from ..models.layers import attention_decode  # noqa: PLC0415
 
@@ -509,6 +512,8 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
 
     def body(x, layer_in):
         lp, cache_l, mlp_l, attn_l = layer_in
+        if table is not None:
+            cache_l = {**cache_l, "table": table}
         h = rms_norm(x, lp["norm1"])
         wmm = (
             (
@@ -553,6 +558,8 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
             up = pap("w_up", hf)
             y2 = pap("w_down", (gate * up).astype(hf.dtype))
         x = x + y2.reshape(b, s, d).astype(x.dtype)
+        if "k_new" in new_cache:
+            return x, {"k_new": new_cache["k_new"], "v_new": new_cache["v_new"]}
         return x, {"k": new_cache["k"], "v": new_cache["v"]}
 
     x, new_kv = jax.lax.scan(body, x, xs)
@@ -567,4 +574,6 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
     else:
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
         logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if table is not None:
+        return logits, {**new_kv, "table": table, "pos": pos + 1}
     return logits, {**new_kv, "pos": pos + 1}

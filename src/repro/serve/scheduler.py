@@ -63,6 +63,23 @@ it adds host transfers:
   bit-identical to a clean dense run, since re-admission re-primes from the
   prompt with the request's own seed.  A second trip fails the request for
   good: the retry is bounded, never a loop.
+
+Paged KV pool (DESIGN.md §11, ``ServeConfig.page_size > 0``): the
+slot-stacked contiguous pool is replaced by a shared block arena plus
+per-slot block tables (``models.cache``).  The run loop is unchanged —
+admission, one fused segment, one sync — but admission allocates blocks
+lazily (pages covering the prompt up front, decode pages extended at each
+sync), retirement refcount-frees them, and identical prompt prefixes share
+read-only blocks through the allocator's hash registry (full pages by
+refcount, partial tail pages by copy-on-write).  Mid-flight arena
+exhaustion preempts the latest-admitted slot (its request re-queues and
+re-primes — same seed, identical tokens), so the earliest admission always
+progresses.  With ``prefill_chunk > 0`` long prompts prefill in chunks
+co-scheduled between decode segments: one chunk per round per admitting
+slot, so decoding slots keep stepping through an arbitrarily long
+admission.  The decode math is untouched — the gathered block view is
+shape-identical to the slot-pool cache — so paged decode stays
+bit-identical to the slot pool (tests/test_paged.py).
 """
 
 from __future__ import annotations
@@ -126,6 +143,22 @@ class Completion:
 
 
 @dataclasses.dataclass
+class _PrefillJob:
+    """Host state of an in-progress paged prefill (DESIGN.md §11): chunked
+    long-prompt admission, prefix-suffix recompute after a partial prefix
+    hit, or the 1-token re-peek of a fully prefix-matched prompt
+    (``write_from == L``: attention over the shared blocks, zero writes)."""
+
+    prompt: np.ndarray
+    L: int
+    start: int  # next chunk's first sequence position
+    write_from: int  # first row this request may write (rows below are shared)
+    chunk: int  # chunk width (one compiled chunk program per width)
+    seed: int
+    poisoned: bool = False  # fault plan: poison fires at completion, not admission
+
+
+@dataclasses.dataclass
 class _Slot:
     """Host-side bookkeeping for one in-flight slot."""
 
@@ -139,6 +172,7 @@ class _Slot:
     deadline: float = float("inf")  # absolute run-relative deadline
     ttft_s: float = float("nan")
     req: Optional[Request] = None  # kept for the bounded dense-retry requeue
+    prefill: Optional[_PrefillJob] = None  # paged: chunked admission in flight
 
     @property
     def active(self) -> bool:
@@ -199,23 +233,83 @@ class Scheduler:
         # scale out with ``data`` while the packed weights scale out with
         # ``model`` inside the engine's decode step.
         kshape = jax.random.key_data(jax.random.key(0)).shape
-        self._cache = self.model.init_slot_cache(slots, engine.sc.max_len)
         self._token = jnp.zeros((slots, 1, 1), jnp.int32)
         self._kdata = jnp.zeros((slots,) + kshape, jnp.uint32)
+        # paged KV pool (DESIGN.md §11): page_size > 0 swaps the slot-stacked
+        # contiguous pool for a block arena + per-slot tables.  Families the
+        # paged layout can't host (recurrent state, vlm patch rows) silently
+        # keep the slot pool — same knob, same scheduler, dense fallback.
+        self.paged = bool(engine.sc.page_size) and engine.paged_supported
+        self._prefix_on = self.paged and engine.sc.prefix_cache
+        self._chunk_cfg = engine.sc.prefill_chunk if self.paged else 0
+        if self.paged:
+            from ..models.cache import (
+                BlockAllocator,
+                PagedLayout,
+                paged_block_bytes,
+                paged_pool_bytes,
+            )
+
+            self._layout = PagedLayout.build(
+                slots, engine.sc.max_len, engine.sc.page_size, engine.sc.arena_blocks
+            )
+            self._alloc = BlockAllocator(self._layout)
+            self._pstate = self.model.init_paged_pool(self._layout, engine.sc.max_len)
+            if engine.mesh is not None:
+                from ..models.cache import paged_shardings
+
+                self._pstate = jax.device_put(
+                    self._pstate, paged_shardings(self._pstate, engine.mesh)
+                )
+            self._arena_names = tuple(sorted(self._pstate["arena"].keys()))
+            self._block_bytes = paged_block_bytes(self._pstate)
+            self._arena_bytes = paged_pool_bytes(self._pstate)
+            # host mirrors of the device tables/positions — kept exact (every
+            # pos/table mutation happens at a host-driven event), so table
+            # extension and page accounting never read the device back
+            self._rows = np.stack(
+                [np.full(self._layout.n_pages, self._layout.scratch_block(i), np.int32)
+                 for i in range(slots)]
+            )
+            self._pos = [0] * slots
+            self._slot_blocks: List[List[int]] = [[] for _ in range(slots)]
+            self._slot_private: List[List[int]] = [[] for _ in range(slots)]
+            self._slot_npages = [0] * slots
+            self._seg_paged = jax.jit(
+                self._segment_paged_fn, static_argnums=(4, 5), donate_argnums=(1, 2, 3)
+            )
+            self._bind = jax.jit(self._bind_fn, donate_argnums=(0, 1, 2))
+            self._fill = jax.jit(self._fill_fn, donate_argnums=(0,))
+            self._rebind = jax.jit(self._rebind_fn, donate_argnums=(0,))
+            self._zero = jax.jit(self._zero_fn, donate_argnums=(0,))
+            self._copyb = jax.jit(self._copy_fn, donate_argnums=(0,))
+            self._poisonb = jax.jit(self._poison_blk_fn, donate_argnums=(0,))
+            self._resetp = jax.jit(self._reset_fn, donate_argnums=(0,))
+            self._cache = None
+            self._batch_axes = None
+            self._slot_bytes = self._arena_bytes // max(slots, 1)
+        else:
+            self._cache = self.model.init_slot_cache(slots, engine.sc.max_len)
+            if engine.mesh is not None:
+                from ..models.cache import slot_shardings
+
+                self._cache = jax.device_put(
+                    self._cache, slot_shardings(self._cache, engine.mesh)
+                )
+            self._batch_axes = self.model.cache_batch_axes(engine.sc.max_len)
+            self._slot_bytes = sum(
+                int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(self._cache)
+            ) // max(slots, 1)
         if engine.mesh is not None:
             from ..dist.sharding import batch_sharding
-            from ..models.cache import slot_shardings
 
-            self._cache = jax.device_put(
-                self._cache, slot_shardings(self._cache, engine.mesh)
-            )
             self._token = jax.device_put(
                 self._token, batch_sharding(engine.mesh, slots, self._token.ndim)
             )
             self._kdata = jax.device_put(
                 self._kdata, batch_sharding(engine.mesh, slots, self._kdata.ndim)
             )
-        self._batch_axes = self.model.cache_batch_axes(engine.sc.max_len)
         # donate the pool state: segments and admissions update it in place.
         # ``dense`` is static: quarantining the pack flips it, forcing the
         # retrace that rebinds the decode step onto the dense path.
@@ -237,7 +331,7 @@ class Scheduler:
         self._fault_fired: set = set()  # rids whose one-shot cache fault ran
         self._counters: Dict[str, int] = dict(
             rejected=0, shed=0, timed_out=0, cancelled=0,
-            fallback=0, failed=0, quarantined=0,
+            fallback=0, failed=0, quarantined=0, preempted=0,
         )
         self._ran = False  # epoch flag: True after run() so the next
         # submit()/cancel()/run() starts a fresh completion/counter epoch
@@ -247,6 +341,12 @@ class Scheduler:
         self._active_slot_steps = 0
         self._decode_s = 0.0
         self._admit_s = 0.0
+        # cache observability (DESIGN.md §11): Σ used-KV bytes and Σ active
+        # slots, sampled once per segment sync — their ratio is the
+        # HBM-bytes-per-active-request gauge the paged bench gates on
+        self._kv_used_acc = 0
+        self._kv_active_acc = 0
+        self._alloc_snap = (0, 0, 0, 0)  # (hits, lookups, cow, evictions) at epoch start
 
     # -- epoch ----------------------------------------------------------------
 
@@ -269,6 +369,14 @@ class Scheduler:
         self._seg_steps = 0
         self._active_slot_steps = 0
         self._decode_s = self._admit_s = 0.0
+        self._kv_used_acc = self._kv_active_acc = 0
+        if self.paged:
+            # the prefix registry itself persists across epochs (warm cache is
+            # the point); only the rate counters snapshot per epoch
+            self._alloc_snap = (
+                self._alloc.hits, self._alloc.lookups,
+                self._alloc.cow_copies, self._alloc.evictions,
+            )
 
     # -- submission -----------------------------------------------------------
 
@@ -288,6 +396,16 @@ class Scheduler:
                 f"segment({self.segment}) = {budget} exceeds max_len "
                 f"{self.eng.sc.max_len}"
             )
+        if self.paged:
+            worst = -(-budget // self._layout.page)
+            if worst > self._layout.user_blocks:
+                raise ValueError(
+                    f"worst-case pages {worst} for this request exceed the "
+                    f"arena's {self._layout.user_blocks} user blocks "
+                    f"(page_size={self._layout.page}, "
+                    f"arena_blocks={self.eng.sc.arena_blocks}) — even an "
+                    "empty pool could never hold it"
+                )
         rid = self._next_rid
         self._next_rid += 1
         req = dataclasses.replace(req, prompt=prompt)
@@ -394,6 +512,106 @@ class Scheduler:
         )
         return token, kdata, cache, toks, okg
 
+    def _segment_paged_fn(self, params, token, kdata, pstate, steps: int, dense: bool):
+        """Paged twin of :meth:`_segment_fn`.  Each slot decodes against the
+        *shared* arena (a vmap constant — only its block table and ``pos``
+        carry the slot axis) and returns its new KV row as a pending write;
+        the conflict-free scatter into the arena happens once per step,
+        outside the slot vmap.  The gathered block view inside the model is
+        shape-identical to the slot-pool cache, so the math — and the emitted
+        tokens — are bit-identical to :meth:`_segment_fn`."""
+        from ..models.cache import paged_in_axes, paged_scatter_token, paged_view
+
+        decode = self.eng._decode_dense_fn if dense else self.eng._decode_fn
+        names = self._arena_names
+
+        def body(carry, _):
+            token, kdata, pstate = carry
+
+            def one(tok, kd, c):
+                key = jax.random.wrap_key_data(kd)
+                key, sub = jax.random.split(key)
+                nxt, c2, ok = decode(params, tok, c, sub)
+                rows = {n + "_new": c2[n + "_new"] for n in names}
+                return nxt, jax.random.key_data(key), rows, ok
+
+            token, kdata, rows, ok = jax.vmap(one, in_axes=(0, 0, paged_in_axes(pstate)))(
+                token, kdata, paged_view(pstate)
+            )
+            pstate = paged_scatter_token(pstate, rows)
+            return (token, kdata, pstate), (token[:, 0, 0], ok[:, 0])
+
+        (token, kdata, pstate), (toks, okg) = jax.lax.scan(
+            body, (token, kdata, pstate), None, length=steps
+        )
+        return token, kdata, pstate, toks, okg
+
+    # -- jitted paged-pool mutations (all donate the pool state) --------------
+
+    @staticmethod
+    def _bind_fn(pstate, token, kdata, idx, rows, lengths, nxt, kds):
+        """Donated one-dispatch bind of prefilled requests into slots ``idx``:
+        block-table rows, positions, first tokens and PRNG key data.  Padding
+        rows carry an out-of-range index and drop — the paged counterpart of
+        ``_write_many_fn``."""
+        from ..models.cache import bind_slot_pages
+
+        table, pos = bind_slot_pages(pstate["table"], pstate["pos"], idx, rows, lengths)
+        token = token.at[idx].set(nxt[:, :, None], mode="drop")
+        kdata = kdata.at[idx].set(kds.astype(kdata.dtype), mode="drop")
+        return {"arena": pstate["arena"], "table": table, "pos": pos}, token, kdata
+
+    @staticmethod
+    def _fill_fn(pstate, page_tables, primed):
+        """Donated scatter of a primed contiguous cache into arena blocks
+        (sentinel table entries — padding rows, shared pages — drop)."""
+        from ..models.cache import write_prefill_pages
+
+        return {**pstate, "arena": write_prefill_pages(pstate["arena"], page_tables, primed)}
+
+    @staticmethod
+    def _rebind_fn(pstate, idx, rows, lengths):
+        """Donated table-row rewrite (lazy decode-page extension): repoint
+        slots ``idx`` at ``rows`` without touching tokens or keys."""
+        from ..models.cache import bind_slot_pages
+
+        table, pos = bind_slot_pages(pstate["table"], pstate["pos"], idx, rows, lengths)
+        return {"arena": pstate["arena"], "table": table, "pos": pos}
+
+    @staticmethod
+    def _zero_fn(pstate, ids):
+        from ..models.cache import zero_blocks
+
+        return {**pstate, "arena": zero_blocks(pstate["arena"], ids)}
+
+    @staticmethod
+    def _copy_fn(pstate, src, dst):
+        from ..models.cache import copy_block
+
+        return {**pstate, "arena": copy_block(pstate["arena"], src, dst)}
+
+    @staticmethod
+    def _poison_blk_fn(pstate, blk):
+        from ..models.cache import paged_poison_block
+
+        return {**pstate, "arena": paged_poison_block(pstate["arena"], blk)}
+
+    @staticmethod
+    def _reset_fn(pstate, i, scratch_id):
+        from ..models.cache import paged_reset_slot
+
+        return paged_reset_slot(pstate, i, scratch_id)
+
+    def _zero_ids(self, ids) -> None:
+        """Zero arena blocks ``ids`` host-side list, chunked to a fixed jit
+        width (out-of-range padding entries are no-ops on device)."""
+        w = self._layout.n_pages
+        ids = list(ids)
+        for j in range(0, len(ids), w):
+            grp = ids[j : j + w]
+            grp += [self._layout.oob] * (w - len(grp))
+            self._pstate = self._zero(self._pstate, jnp.asarray(grp, jnp.int32))
+
     # -- admission / retirement ----------------------------------------------
 
     @staticmethod
@@ -418,6 +636,23 @@ class Scheduler:
         kdata = kdata.at[idx].set(kds.astype(kdata.dtype), mode="drop")
         return cache, token, kdata
 
+    def _kds_for(self, seeds, nb: int):
+        """Per-request PRNG key data, padded to batch ``nb``: one vmapped
+        derivation when every seed fits the uint32 word jax.random.key folds
+        it into (bit-exact there, verified in tests); anything else — wide
+        seeds an int32 array would overflow on, negative seeds whose x64
+        folding differs from the uint32 cast — falls back to eager
+        per-request key creation (still no host sync)."""
+        seeds = list(seeds)
+        if all(0 <= s < 2**32 for s in seeds):
+            packed = np.asarray(seeds + [0] * (nb - len(seeds)), np.uint32)
+            return self._derive_keys(jnp.asarray(packed))
+        zero = jnp.zeros(self._kdata.shape[1:], self._kdata.dtype)
+        return jnp.stack(
+            [jax.random.key_data(jax.random.key(s)) for s in seeds]
+            + [zero] * (nb - len(seeds))
+        )
+
     def _bind_slot(self, i: int, rid: int, req: Request, first, now: float) -> None:
         slot = self._slot[i]
         slot.rid, slot.tokens, slot.first = rid, [], first
@@ -429,6 +664,7 @@ class Scheduler:
         )
         slot.ttft_s = float("nan")
         slot.req = req
+        slot.prefill = None
 
     def _admit(self, i: int, rid: int, req: Request, now: float) -> None:
         """Per-request exact-length admission (recurrent families, and the
@@ -464,24 +700,7 @@ class Scheduler:
                 tokens[j, : len(req.prompt)] = req.prompt
                 lengths[j] = len(req.prompt)
                 idx[j] = i
-            # per-request PRNG keys: one vmapped derivation when every seed
-            # fits the uint32 word jax.random.key folds it into (bit-exact
-            # there, verified in tests); anything else — wide seeds an int32
-            # array would overflow on, negative seeds whose x64 folding
-            # differs from the uint32 cast — falls back to eager per-request
-            # key creation (still no host sync)
-            seeds = [req.seed for _, _, req in group]
-            if all(0 <= s < 2**32 for s in seeds):
-                packed = np.asarray(
-                    seeds + [0] * (nb - len(group)), np.uint32
-                )
-                kds = self._derive_keys(jnp.asarray(packed))
-            else:
-                zero = jnp.zeros(self._kdata.shape[1:], self._kdata.dtype)
-                kds = jnp.stack(
-                    [jax.random.key_data(jax.random.key(s)) for s in seeds]
-                    + [zero] * (nb - len(group))
-                )
+            kds = self._kds_for([req.seed for _, _, req in group], nb)
             nxt, cache = self.eng.prime_many(tokens, lengths)
             self._cache, self._token, self._kdata = self._write_many(
                 self._cache, self._token, self._kdata,
@@ -490,6 +709,317 @@ class Scheduler:
             for j, (i, rid, req) in enumerate(group):
                 self._bind_slot(i, rid, req, nxt[j : j + 1], now)
         self._admit_s += self._clock() - t0
+
+    # -- paged admission (DESIGN.md §11) --------------------------------------
+
+    def _admit_paged(self, free: List[int], picked, now: float) -> list:
+        """Paged admission round: per request, consult the prefix cache,
+        allocate the prompt's blocks, then either join this round's bucketed
+        whole-prefill (no prefix hit, short prompt) or start a chunked
+        prefill job (long prompt, or a prefix hit whose suffix must be
+        recomputed against the shared blocks).  If the arena can't cover a
+        request *right now* it re-queues — no admission-time preemption, so
+        two big prompts can never thrash each other out; mid-flight
+        extension is where preemption lives.  Returns the ``(slot, rid,
+        req)`` triples actually admitted (fault injection targets only
+        those)."""
+        t0 = self._clock()
+        admitted, whole = [], []
+        pairs = list(zip(free, picked))
+        for n_done, (i, (rid, req)) in enumerate(pairs):
+            if not self._plan_paged_one(i, rid, req, now, whole):
+                for j, (rid2, req2) in pairs[n_done:]:
+                    bisect.insort(self._queue, (req2.arrival_s, rid2, req2))
+                break
+            admitted.append((i, rid, req))
+        if whole:
+            self._prime_whole_paged(whole)
+        self._admit_s += self._clock() - t0
+        return admitted
+
+    def _plan_paged_one(self, i: int, rid: int, req: Request, now: float, whole) -> bool:
+        """Allocate/share blocks for one request and decide its prefill path.
+        False = arena cannot cover its prompt pages right now (matched
+        references are returned before bailing)."""
+        from ..models.cache import prefix_page_digests, prefix_tail_digests
+
+        prompt, L = req.prompt, len(req.prompt)
+        page = self._layout.page
+        f = self.eng.sc.faults
+        poisoned = (
+            f is not None
+            and f.wants_cache_nan(rid)
+            and (not f.cache_nan_once or rid not in self._fault_fired)
+        )
+        full = prefix_page_digests(prompt, page) if self._prefix_on else []
+        shared = self._alloc.match_pages(full) if self._prefix_on else []
+        k = len(shared)
+        cow = None
+        if self._prefix_on and L % page and k == L // page:
+            # every full page matched — probe the partial tail for a COW source
+            seed = full[-1] if full else b""
+            cow = self._alloc.match_tail(prefix_tail_digests(seed, prompt[k * page :]))
+        n_prompt_pages = -(-L // page)
+        got = self._alloc.alloc(n_prompt_pages - k)
+        if got is None:
+            if shared:
+                self._alloc.free(shared)  # hashed: parked back in the cached pool
+            return False
+        priv, scrub = got
+        if scrub:
+            self._zero_ids(scrub)
+        row = self._rows[i]
+        row[:] = self._layout.scratch_block(i)
+        row[:k] = shared
+        row[k:n_prompt_pages] = priv
+        self._slot_blocks[i] = list(shared) + list(priv)
+        self._slot_private[i] = list(priv)
+        self._slot_npages[i] = n_prompt_pages
+        start = k * page
+        if cow is not None:
+            src, rows_m = cow
+            # copy the matched tail rows into our private tail page; the
+            # sharer keeps reading the original — divergence is free
+            self._pstate = self._copyb(self._pstate, jnp.int32(src), jnp.int32(priv[0]))
+            start += rows_m
+        self._bind_slot(i, rid, req, None, now)
+        if start == 0 and (self._chunk_cfg == 0 or L <= self._chunk_cfg):
+            whole.append((i, rid, req, poisoned))
+            return True
+        if start >= L:
+            # fully matched prompt: skip re-prefill entirely — one 1-token
+            # "re-peek" chunk recomputes the last position's logits against
+            # the shared blocks (write_from = L: zero arena writes)
+            job = _PrefillJob(prompt, L, start=L - 1, write_from=L,
+                              chunk=self._chunk_cfg or self.eng.bucket_len(1),
+                              seed=req.seed, poisoned=poisoned)
+        else:
+            cw = self._chunk_cfg or self.eng.bucket_len(max(L - start, 1))
+            job = _PrefillJob(prompt, L, start=start, write_from=start,
+                              chunk=cw, seed=req.seed, poisoned=poisoned)
+        self._slot[i].prefill = job
+        return True
+
+    def _prime_whole_paged(self, whole) -> None:
+        """Bucketed one-dispatch whole-prompt prefill for this round's
+        no-prefix-hit requests, scattered into their arena pages and bound in
+        one donated write each — the paged mirror of ``_admit_batched``
+        (bit-exact page scatter keeps slot-pool parity)."""
+        groups: Dict[int, list] = {}
+        for i, rid, req, poisoned in whole:
+            groups.setdefault(self.eng.bucket_len(len(req.prompt)), []).append(
+                (i, rid, req, poisoned)
+            )
+        n_pages = self._layout.n_pages
+        for blen, group in groups.items():
+            nb = 1 << (len(group) - 1).bit_length()
+            tokens = np.zeros((nb, blen), np.int32)
+            lengths = np.ones(nb, np.int32)
+            idx = np.full(nb, self.slots, np.int32)  # OOB -> dropped binds
+            # the primed cache spans max_len rows (right-padded); pages past
+            # the prompt carry the sentinel and drop in the scatter
+            pt = np.full((nb, n_pages), self._layout.oob, np.int32)
+            rows_arr = np.zeros((nb, n_pages), np.int32)
+            for j, (i, rid, req, poisoned) in enumerate(group):
+                tokens[j, : len(req.prompt)] = req.prompt
+                lengths[j] = len(req.prompt)
+                idx[j] = i
+                npp = self._slot_npages[i]
+                pt[j, :npp] = self._rows[i][:npp]
+                rows_arr[j] = self._rows[i]
+            kds = self._kds_for([req.seed for _, _, req, _ in group], nb)
+            nxt, cache = self.eng.prime_many(tokens, lengths)
+            primed = {name: cache[name] for name in self._arena_names}
+            self._pstate = self._fill(self._pstate, jnp.asarray(pt), primed)
+            self._pstate, self._token, self._kdata = self._bind(
+                self._pstate, self._token, self._kdata,
+                jnp.asarray(idx), jnp.asarray(rows_arr), jnp.asarray(lengths),
+                nxt, kds,
+            )
+            for j, (i, rid, req, poisoned) in enumerate(group):
+                self._slot[i].first = nxt[j : j + 1]
+                self._pos[i] = len(req.prompt)
+                if not poisoned:
+                    self._register_prompt(i, req.prompt)
+
+    def _register_prompt(self, i: int, prompt: np.ndarray) -> None:
+        """Hash-register slot ``i``'s prompt pages for future prefix sharing
+        (first writer wins; already-shared pages re-register as no-ops).
+        Never called for fault-poisoned requests — a poisoned block must not
+        be matchable."""
+        if not self._prefix_on:
+            return
+        from ..models.cache import prefix_page_digests, prefix_tail_digests
+
+        page = self._layout.page
+        full = prefix_page_digests(prompt, page)
+        row = self._rows[i]
+        for p, d in enumerate(full):
+            self._alloc.register_page(d, int(row[p]))
+        tail_len = len(prompt) % page
+        if tail_len:
+            seed = full[-1] if full else b""
+            td = prefix_tail_digests(seed, prompt[len(full) * page :])
+            self._alloc.register_tail(td[-1], int(row[len(full)]), tail_len)
+
+    def _step_prefills(self) -> None:
+        """Advance every in-flight prefill job by ONE chunk — co-scheduled
+        between decode segments, so a long admission never stalls decoding
+        slots (Sarathi-style chunked prefill, DESIGN.md §11).  A completed
+        job binds its slot (table row, position, deferred first token, PRNG
+        stream) and registers its prefix hashes."""
+        if not self.paged:
+            return
+        t0 = self._clock()
+        for i, slot in enumerate(self._slot):
+            job = slot.prefill
+            if job is None or not slot.active:
+                continue
+            s = job.start
+            n = min(job.chunk, job.L - s)
+            toks = np.zeros((1, job.chunk), np.int32)
+            toks[0, :n] = job.prompt[s : s + n]
+            logits, arena = self.eng.prefill_chunk(
+                toks, self._pstate["arena"], jnp.asarray(self._rows[i]),
+                s, n, job.write_from,
+            )
+            self._pstate = {**self._pstate, "arena": arena}
+            job.start = s + n
+            if job.start >= job.L:
+                first = (
+                    jnp.argmax(logits.astype(jnp.float32), axis=-1)[:, None]
+                    .astype(jnp.int32)
+                )
+                self._complete_prefill(i, job, first)
+        self._admit_s += self._clock() - t0
+
+    def _complete_prefill(self, i: int, job: _PrefillJob, first) -> None:
+        slot = self._slot[i]
+        self._pstate, self._token, self._kdata = self._bind(
+            self._pstate, self._token, self._kdata,
+            jnp.asarray([i], jnp.int32), jnp.asarray(self._rows[i][None]),
+            jnp.asarray([job.L], jnp.int32), first,
+            self._kds_for([job.seed], 1),
+        )
+        self._pos[i] = job.L
+        slot.first = first
+        slot.prefill = None
+        if job.poisoned:
+            self._fault_fired.add(slot.rid)
+            self._apply_paged_poison(i)
+        else:
+            self._register_prompt(i, job.prompt)
+
+    def _extend_paged(self) -> None:
+        """Lazy decode-page extension before each segment: make sure every
+        decoding slot's table covers the rows this segment will write.
+        Arena exhaustion preempts the latest-admitted other slot — its
+        request re-queues and re-primes later with its own seed (identical
+        tokens), and the earliest admission is never the victim, so the pool
+        always makes progress."""
+        if not self.paged:
+            return
+        t0 = self._clock()
+        for i in range(self.slots):
+            slot = self._slot[i]
+            if not slot.active or slot.prefill is not None:
+                continue
+            needed = min(
+                -(-(self._pos[i] + self.segment) // self._layout.page),
+                self._layout.n_pages,
+            )
+            cur = self._slot_npages[i]
+            if needed <= cur:
+                continue
+            ids = self._alloc_or_preempt(needed - cur, protect=i)
+            self._rows[i][cur:needed] = ids
+            self._slot_blocks[i] += list(ids)
+            self._slot_private[i] += list(ids)
+            self._slot_npages[i] = needed
+            self._rebind_row(i)
+        self._admit_s += self._clock() - t0
+
+    def _alloc_or_preempt(self, n: int, protect: int) -> list:
+        got = self._alloc.alloc(n)
+        while got is None:
+            cands = [j for j, s in enumerate(self._slot) if s.active and j != protect]
+            if not cands:
+                raise RuntimeError(
+                    "paged arena exhausted with nothing left to preempt "
+                    "(submit-time worst-case check should make this unreachable)"
+                )
+            victim = max(cands, key=lambda j: (self._slot[j].admit_s, j))
+            self._preempt(victim)
+            got = self._alloc.alloc(n)
+        ids, scrub = got
+        if scrub:
+            self._zero_ids(scrub)
+        return ids
+
+    def _preempt(self, j: int) -> None:
+        """Evict slot ``j`` mid-flight: free its blocks and re-queue its
+        request.  Re-admission re-primes from the prompt with the request's
+        own seed, so the eventual tokens are identical to an uninterrupted
+        run — preemption changes *when*, never *what*."""
+        slot = self._slot[j]
+        rid, req = slot.rid, slot.req
+        self._release_slot_pages(j)
+        self._slot[j] = _Slot()
+        self._counters["preempted"] += 1
+        bisect.insort(self._queue, (req.arrival_s, rid, req))
+
+    def _rebind_row(self, i: int) -> None:
+        self._pstate = self._rebind(
+            self._pstate, jnp.asarray([i], jnp.int32),
+            jnp.asarray(self._rows[i][None]),
+            jnp.asarray([self._pos[i]], jnp.int32),
+        )
+
+    def _release_slot_pages(self, i: int) -> None:
+        """Return slot ``i``'s blocks to the allocator (hashed blocks park in
+        the cached pool keeping their bytes; unhashed dead blocks are zeroed
+        on the spot) and detach its table back to scratch."""
+        blocks = self._slot_blocks[i]
+        if blocks:
+            dead = self._alloc.free(blocks)
+            if dead:
+                self._zero_ids(dead)
+        self._slot_blocks[i] = []
+        self._slot_private[i] = []
+        self._slot_npages[i] = 0
+        self._rows[i][:] = self._layout.scratch_block(i)
+        self._pos[i] = 0
+        self._pstate = self._resetp(
+            self._pstate, jnp.int32(i), jnp.int32(self._layout.scratch_block(i))
+        )
+
+    def _apply_paged_poison(self, i: int) -> None:
+        """§9 cache poisoning ported to the paged layout: NaN the slot's
+        first PRIVATE block.  A fully prefix-shared prompt owns none, so one
+        is privatized first (COW) — poison never reaches a block another
+        request reads, keeping the blast radius at one request even under
+        sharing.  The block's hash registration (if any) is dropped so no
+        future prompt can match into the poisoned bytes."""
+        if not self._slot_blocks[i]:
+            return
+        if self._slot_private[i]:
+            blk = self._slot_private[i][0]
+        else:
+            [blk] = self._alloc_or_preempt(1, protect=i)
+            old = int(self._rows[i][0])
+            self._pstate = self._copyb(self._pstate, jnp.int32(old), jnp.int32(blk))
+            self._rows[i][0] = blk
+            bl = self._slot_blocks[i]
+            bl[bl.index(old)] = blk
+            self._slot_private[i].insert(0, blk)
+            dead = self._alloc.free([old])
+            if dead:
+                self._zero_ids(dead)
+            self._rebind_row(i)
+        dead = self._alloc.forget(blk)
+        if dead:
+            self._zero_ids(dead)
+        self._pstate = self._poisonb(self._pstate, jnp.int32(blk))
 
     def _inject_admission_faults(self, free: List[int], picked) -> None:
         """Apply the seeded fault plan to this admission round: admission
@@ -508,8 +1038,17 @@ class Scheduler:
             if f.wants_cache_nan(rid) and (
                 not f.cache_nan_once or rid not in self._fault_fired
             ):
-                self._fault_fired.add(rid)
-                self._cache = self._poison(self._cache, jnp.int32(i))
+                if self.paged:
+                    if self._slot[i].prefill is not None:
+                        # chunked admission: the chunks would overwrite poison
+                        # injected now — the job carries the fault plan and
+                        # fires it at completion (_complete_prefill)
+                        continue
+                    self._fault_fired.add(rid)
+                    self._apply_paged_poison(i)
+                else:
+                    self._fault_fired.add(rid)
+                    self._cache = self._poison(self._cache, jnp.int32(i))
         self._admit_s += self._clock() - t0
 
     def _pop_arrived(self, k: int, now: float) -> list:
@@ -554,6 +1093,8 @@ class Scheduler:
         )
         self._completions[slot.rid] = done
         self._cancel.discard(slot.rid)
+        if self.paged:
+            self._release_slot_pages(i)
         self._slot[i] = _Slot()
         return done
 
@@ -575,6 +1116,10 @@ class Scheduler:
         self._retried.add(rid)
         self._fallback_rids.add(rid)
         self._counters["fallback"] += 1
+        if self.paged:
+            # the poisoned private block dies unhashed here and is zeroed —
+            # shared blocks just drop a reference, their bytes stay clean
+            self._release_slot_pages(i)
         self._slot[i] = _Slot()  # slot cache is replaced wholesale on re-admission
         bisect.insort(self._queue, (req.arrival_s, rid, req))
 
@@ -608,12 +1153,25 @@ class Scheduler:
                 if free and self._queue:
                     picked = self._pop_arrived(len(free), t)
                     if picked:
-                        if self.admission == "batched" and self.eng.batched_prefill:
-                            self._admit_batched(free[: len(picked)], picked, t)
+                        if self.paged:
+                            admitted = self._admit_paged(free[: len(picked)], picked, t)
+                            if admitted:
+                                self._inject_admission_faults(
+                                    [i for i, _, _ in admitted],
+                                    [(rid, req) for _, rid, req in admitted],
+                                )
                         else:
-                            for i, (rid, req) in zip(free, picked):
-                                self._admit(i, rid, req, t)
-                        self._inject_admission_faults(free, picked)
+                            if self.admission == "batched" and self.eng.batched_prefill:
+                                self._admit_batched(free[: len(picked)], picked, t)
+                            else:
+                                for i, (rid, req) in zip(free, picked):
+                                    self._admit(i, rid, req, t)
+                            self._inject_admission_faults(free, picked)
+                if self.paged:
+                    # one prefill chunk per admitting slot, then make sure
+                    # every decoding slot's table covers this segment's rows
+                    self._step_prefills()
+                    self._extend_paged()
                 active_idx = [i for i, s in enumerate(self._slot) if s.active]
                 if not active_idx:
                     if not self._queue:
@@ -628,17 +1186,41 @@ class Scheduler:
                 # come back in the same device_get — the guard costs no
                 # extra host transfer
                 t0 = self._clock()
-                self._token, self._kdata, self._cache, toks, okg = self._seg(
-                    self.eng.params, self._token, self._kdata, self._cache,
-                    self.segment, bool(self.eng.quarantined),
-                )
+                if self.paged:
+                    self._token, self._kdata, self._pstate, toks, okg = self._seg_paged(
+                        self.eng.params, self._token, self._kdata, self._pstate,
+                        self.segment, bool(self.eng.quarantined),
+                    )
+                else:
+                    self._token, self._kdata, self._cache, toks, okg = self._seg(
+                        self.eng.params, self._token, self._kdata, self._cache,
+                        self.segment, bool(self.eng.quarantined),
+                    )
                 toks_np, ok_np = jax.device_get((toks, okg))  # (segment, slots) x2
                 self._decode_s += self._clock() - t0
                 self._seg_steps += self.segment
                 self._active_slot_steps += len(active_idx) * self.segment
+                if self.paged:
+                    self._pos = [p + self.segment for p in self._pos]
+                self._kv_active_acc += len(active_idx)
+                self._kv_used_acc += (
+                    self._alloc.live_blocks * self._block_bytes
+                    if self.paged
+                    else len(active_idx) * self._slot_bytes
+                )
                 t = now()
                 for i in active_idx:
                     slot = self._slot[i]
+                    if slot.prefill is not None:
+                        # mid-chunked-prefill: no tokens yet; only deadlines
+                        # and cancellation apply at this sync
+                        if slot.rid in self._cancel:
+                            self._counters["cancelled"] += 1
+                            self._retire(i, t, Status.CANCELLED)
+                        elif t > slot.deadline:
+                            self._counters["timed_out"] += 1
+                            self._retire(i, t, Status.TIMEOUT)
+                        continue
                     if slot.rid in self._cancel:
                         self._counters["cancelled"] += 1
                         self._retire(i, t, Status.CANCELLED)
@@ -709,5 +1291,44 @@ class Scheduler:
             "ttft_p95_s": pct(ttft, 95),
             "slot_occupancy": self._active_slot_steps / max(self.slots * self._seg_steps, 1),
         }
+        # cache observability (DESIGN.md §11) — always present, NaN where the
+        # gauge doesn't apply (slot-pool mode, or an epoch with no traffic),
+        # so an empty run never reads as an infinitely cheap one
+        if self.paged:
+            h0, l0, c0, e0 = self._alloc_snap
+            hits = self._alloc.hits - h0
+            lookups = self._alloc.lookups - l0
+            out.update({
+                "kv_pool_bytes": float(self._arena_bytes),
+                "kv_block_bytes": float(self._block_bytes),
+                "blocks_total": float(self._layout.user_blocks),
+                "blocks_live": float(self._alloc.live_blocks),
+                "blocks_free": float(self._alloc.free_blocks),
+                "blocks_cached": float(self._alloc.cached_blocks),
+                "prefix_lookups": float(lookups),
+                "prefix_hits": float(hits),
+                "prefix_hit_rate": hits / lookups if lookups else float("nan"),
+                "cow_copies": float(self._alloc.cow_copies - c0),
+                "cache_evictions": float(self._alloc.evictions - e0),
+            })
+        else:
+            out.update({
+                "kv_pool_bytes": float(self._slot_bytes * self.slots),
+                "kv_block_bytes": float(self._slot_bytes),
+                "blocks_total": float("nan"),
+                "blocks_live": float("nan"),
+                "blocks_free": float("nan"),
+                "blocks_cached": float("nan"),
+                "prefix_lookups": 0.0,
+                "prefix_hits": 0.0,
+                "prefix_hit_rate": float("nan"),
+                "cow_copies": 0.0,
+                "cache_evictions": 0.0,
+            })
+        out["hbm_bytes_per_active_request"] = (
+            self._kv_used_acc / self._kv_active_acc
+            if self._kv_active_acc
+            else float("nan")
+        )
         out.update(self._counters)
         return out

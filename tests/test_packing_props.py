@@ -345,3 +345,188 @@ def test_pack_rows_nm_slot_bound():
     np.testing.assert_array_equal(
         unpack_rows(p), np.where(nm_mask(w, n, block), w, 0.0)
     )
+
+
+# ---------------------------------------------------------------------------
+# paged KV block allocator (models/cache.py BlockAllocator, DESIGN.md §11):
+# the host-side invariants the paged scheduler leans on — free/cached/live
+# partition the user pool, refcounts never go negative, allocation never
+# hands out a live or reserved block, and a block freed to the plain free
+# list is never still reachable from a live block table.
+# ---------------------------------------------------------------------------
+
+from repro.models.cache import (  # noqa: E402  (section-local import, as above)
+    BlockAllocator,
+    PagedLayout,
+    prefix_page_digests,
+    prefix_tail_digests,
+)
+
+
+def _alloc_layout(blocks, slots=2):
+    return PagedLayout.build(slots, max_len=64, page=8, blocks=blocks)
+
+
+def _assert_partition(al, lay):
+    assert al.free_blocks + al.cached_blocks + al.live_blocks == lay.user_blocks
+
+
+@given(seed=st.integers(0, 500), blocks=st.integers(2, 24))
+@settings(max_examples=40, deadline=None)
+def test_block_allocator_ops_soup_prop(seed, blocks):
+    """Random alloc/free/register/match soup: after every operation the pool
+    partition holds, live tables only reference refcounted blocks, and blocks
+    that died (returned by ``free`` for zeroing) are unreachable from any
+    live table."""
+    rng = np.random.default_rng(seed)
+    lay = _alloc_layout(blocks)
+    al = BlockAllocator(lay)
+    tables = []  # block-id lists held by simulated live requests
+    digests = {}  # digest -> block we registered it on
+    n_digests = 0
+    for _ in range(80):
+        op = rng.integers(0, 4)
+        if op == 0:  # alloc
+            n = int(rng.integers(1, 4))
+            avail = al.available
+            held = {b for t in tables for b in t}
+            got = al.alloc(n)
+            if n > avail:
+                assert got is None
+            else:
+                ids, scrub = got
+                assert len(ids) == n and len(set(ids)) == n
+                for b in ids:
+                    assert lay.reserved <= b < lay.n_blocks
+                    assert b not in held  # never a block someone still holds
+                    assert al.refcount(b) == 1
+                assert set(scrub) <= set(ids)  # evictions are for our blocks
+                tables.append(ids)
+        elif op == 1 and tables:  # free one request's table
+            t = tables.pop(int(rng.integers(0, len(tables))))
+            dead = al.free(t)
+            for b in dead:
+                assert al.refcount(b) == 0
+                assert all(b not in u for u in tables)  # unreachable
+        elif op == 2 and tables:  # register a random held block
+            t = tables[int(rng.integers(0, len(tables)))]
+            b = t[int(rng.integers(0, len(t)))]
+            n_digests += 1
+            d = n_digests.to_bytes(16, "little")
+            if al.register_page(d, b):
+                digests[d] = b
+        elif op == 3 and digests:  # match a registered digest (adds a ref)
+            d = list(digests)[int(rng.integers(0, len(digests)))]
+            got = al.match_pages([d])
+            if got:  # may have been evicted since registration
+                assert got == [digests[d]]
+                assert al.refcount(got[0]) >= 1
+                tables.append(got)
+        _assert_partition(al, lay)
+        for t in tables:
+            assert all(al.refcount(b) >= 1 for b in t)
+    for t in tables:
+        al.free(t)
+    assert al.live_blocks == 0
+    _assert_partition(al, lay)
+
+
+@given(seed=st.integers(0, 200), pages=st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_prefix_share_roundtrip_prop(seed, pages):
+    """register -> free -> match resurrects the *same* blocks: a shared
+    prefix is one set of physical blocks no matter how many requests read it,
+    refcount tracks the reader count exactly, and freeing all readers parks
+    the bytes in the cached pool instead of killing them."""
+    rng = np.random.default_rng(seed)
+    lay = _alloc_layout(blocks=pages + 3)
+    al = BlockAllocator(lay)
+    prompt = rng.integers(1, 100, pages * 8).astype(np.int32)
+    digs = prefix_page_digests(prompt, 8)
+    assert len(digs) == pages
+    ids, scrub = al.alloc(pages)
+    assert not scrub
+    for d, b in zip(digs, ids):
+        assert al.register_page(d, b)
+    # a second reader shares every page
+    assert al.match_pages(digs) == ids
+    assert all(al.refcount(b) == 2 for b in ids)
+    # both readers leave: hashed blocks park in the cached pool, bytes kept
+    assert al.free(ids) == []
+    assert al.free(ids) == []
+    assert al.live_blocks == 0 and al.cached_blocks == pages
+    # a third reader resurrects them from cache — same physical blocks
+    assert al.match_pages(digs) == ids
+    assert all(al.refcount(b) == 1 for b in ids)
+    assert al.hit_rate == 1.0
+
+
+def test_block_allocator_refcount_underflow_raises():
+    al = BlockAllocator(_alloc_layout(4))
+    ids, _ = al.alloc(2)
+    al.free(ids)
+    try:
+        al.free(ids)  # double free
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("double free must raise, not underflow")
+
+
+def test_block_allocator_eviction_scrub_contract():
+    """When the free list runs dry, alloc evicts cached (hashed, refcount-0)
+    blocks LRU-first and returns them in ``scrub`` — the caller's cue to zero
+    bytes that still hold another prompt's KV.  Evicted digests no longer
+    match."""
+    lay = _alloc_layout(3)
+    al = BlockAllocator(lay)
+    ids, _ = al.alloc(3)
+    digs = [bytes([i]) * 16 for i in range(3)]
+    for d, b in zip(digs, ids):
+        al.register_page(d, b)
+    al.free(ids)
+    assert al.cached_blocks == 3 and al.free_blocks == 0
+    got, scrub = al.alloc(2)
+    assert got == scrub == ids[:2]  # LRU order, both need zeroing
+    assert al.evictions == 2
+    assert al.match_pages([digs[0]]) == []  # evicted digest is gone
+    assert al.match_pages([digs[2]]) == [ids[2]]  # survivor still matches
+
+
+def test_tail_registry_cow_semantics():
+    """Partial-tail registry: ``match_tail`` returns the *longest* registered
+    match, counts a COW copy, and does not ref-bump the source (the caller
+    copies bytes into a fresh block); ``forget`` makes a block unmatchable."""
+    lay = _alloc_layout(6)
+    al = BlockAllocator(lay)
+    rng = np.random.default_rng(9)
+    tail = rng.integers(1, 100, 5).astype(np.int32)
+    digs = prefix_tail_digests(b"", tail)
+    (b3,), _ = al.alloc(1)
+    (b5,), _ = al.alloc(1)
+    assert al.register_tail(digs[2], b3, rows=3)
+    assert al.register_tail(digs[4], b5, rows=5)
+    # probe with the full tail: the 5-row match wins over the 3-row one
+    assert al.match_tail(digs) == (b5, 5)
+    assert al.refcount(b5) == 1  # no ref bump — COW source only
+    assert al.cow_copies == 1
+    # probing only 4 tokens falls back to the 3-row match
+    assert al.match_tail(digs[:4]) == (b3, 3)
+    # forget kills matchability without touching the refcount
+    assert al.forget(b5) == []  # still live: nothing to zero
+    assert al.match_tail(digs) == (b3, 3)
+    assert al.refcount(b5) == 1
+
+
+def test_prefix_digests_are_prefix_dependent():
+    """Chained digests: an identical page at a different position/prefix must
+    NOT collide — equal digests mean equal full prefixes."""
+    page = np.arange(8, dtype=np.int32)
+    a = prefix_page_digests(np.concatenate([page, page]), 8)
+    assert a[0] != a[1]  # same bytes, different chain position
+    b = prefix_page_digests(np.concatenate([page + 1, page]), 8)
+    assert a[1] != b[1]  # same page 1, different page 0
+    # and the tail chain is seeded by the full-page chain
+    t0 = prefix_tail_digests(a[0], page[:3])
+    t1 = prefix_tail_digests(b[0], page[:3])
+    assert t0[0] != t1[0] and len(t0) == 3

@@ -1,0 +1,385 @@
+"""Paged KV-cache pool (DESIGN.md §11): bit-parity with the slot pool across
+dense / fully-packed / quantized / sharded engines, prefix-cache sharing that
+skips re-prefill, copy-on-write at the divergence boundary, chunked prefill
+co-scheduled with live decode, preemption under arena pressure, and the §9
+fault paths ported to the paged layout (poison lands in a *private* block, so
+prefix sharers never see it).
+
+The correctness bar is the one the repo has pinned since §5: the paged pool
+changes *where* KV bytes live, never *what* decode computes — per-request
+tokens bit-identical to the slot-pool scheduler, greedy and sampled."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+import jax
+from conftest import requires_devices
+
+from repro.configs import get_smoke_config
+from repro.core.pruning import prune_tree
+from repro.models import build_model
+from repro.serve import Engine, FaultConfig, Request, Scheduler, ServeConfig, Status
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3_2_1b")
+    params = build_model(cfg).init(jax.random.key(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def vusa_pruned():
+    cfg = get_smoke_config("vusa_edge")
+    params = prune_tree(build_model(cfg).init(jax.random.key(0)), 0.85)
+    return cfg, params
+
+
+def _run(cfg, params, sc, reqs, slots=3, segment=4, mesh=None):
+    sched = Scheduler(
+        Engine(cfg, params, dataclasses.replace(sc), mesh=mesh),
+        slots=slots, segment=segment,
+    )
+    done = sched.run([dataclasses.replace(r) for r in reqs])
+    return sched, done
+
+
+def _assert_same_tokens(a, b):
+    assert sorted(a) == sorted(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid].tokens, b[rid].tokens,
+                                      err_msg=f"rid {rid}")
+
+
+def _ragged_reqs(rng, spec):
+    return [
+        Request(prompt=rng.integers(1, 100, n).astype(np.int32), max_new=m, seed=i)
+        for i, (n, m) in enumerate(spec)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# parity: paged scheduler == slot scheduler, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_paged_parity_dense(llama, temperature):
+    cfg, params = llama
+    rng = np.random.default_rng(0)
+    reqs = _ragged_reqs(rng, [(6, 10), (13, 8), (9, 12), (17, 6), (5, 9), (24, 7)])
+    sc = ServeConfig(max_len=64, temperature=temperature)
+    _, ref = _run(cfg, params, sc, reqs)
+    sp, got = _run(cfg, params, dataclasses.replace(sc, page_size=8), reqs)
+    assert sp.paged
+    _assert_same_tokens(ref, got)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_paged_parity_packed_all(vusa_pruned, temperature):
+    """Whole-model VUSA packing (§7) under the paged pool: the gathered block
+    view must be shape-identical to the slot cache, so the packed decode
+    kernels see the same operands."""
+    cfg, params = vusa_pruned
+    rng = np.random.default_rng(1)
+    reqs = _ragged_reqs(rng, [(5, 8), (11, 6), (7, 8)])
+    sc = ServeConfig(max_len=64, temperature=temperature, packed_weights="all")
+    _, ref = _run(cfg, params, sc, reqs, slots=2)
+    _, got = _run(cfg, params, dataclasses.replace(sc, page_size=8), reqs, slots=2)
+    _assert_same_tokens(ref, got)
+
+
+def test_paged_parity_quantized_int8(vusa_pruned):
+    """Quantized packed values (§10) ride along unchanged: dequant touches
+    weights, not the KV arena."""
+    cfg, params = vusa_pruned
+    rng = np.random.default_rng(2)
+    reqs = _ragged_reqs(rng, [(6, 8), (9, 6)])
+    sc = ServeConfig(max_len=64, packed_weights="all", packed_values="int8")
+    _, ref = _run(cfg, params, sc, reqs, slots=2)
+    _, got = _run(cfg, params, dataclasses.replace(sc, page_size=8), reqs, slots=2)
+    _assert_same_tokens(ref, got)
+
+
+@requires_devices(8)
+def test_paged_parity_sharded(vusa_pruned):
+    """2x4 DP x TP mesh: the arena's block axis shards over 'data'
+    (dist.sharding.block_sharding) — tokens must still match the
+    single-device slot scheduler bit for bit."""
+    from repro.launch.mesh import make_serve_mesh
+
+    cfg, params = vusa_pruned
+    rng = np.random.default_rng(3)
+    reqs = _ragged_reqs(rng, [(6, 8), (11, 6), (8, 7)])
+    sc = ServeConfig(max_len=48, packed_weights="all", vusa_m=32, vusa_a=8)
+    _, ref = _run(cfg, params, sc, reqs, slots=2)
+    sp, got = _run(cfg, params, dataclasses.replace(sc, page_size=8), reqs,
+                   slots=2, mesh=make_serve_mesh("2,4"))
+    assert sp.paged
+    _assert_same_tokens(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: hits skip re-prefill, COW splits partial tails
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_hit_skips_reprefill(llama):
+    """Serving the same page-aligned prompt twice: the second run matches
+    every page, never dispatches a prefill (prime_many), and produces
+    identical tokens off the shared blocks."""
+    cfg, params = llama
+    rng = np.random.default_rng(4)
+    p = rng.integers(1, 100, 16).astype(np.int32)  # 2 full pages
+    sched = Scheduler(
+        Engine(cfg, params, ServeConfig(max_len=64, page_size=8)),
+        slots=2, segment=4,
+    )
+    calls = []
+    inner = sched.eng.prime_many
+    sched.eng.prime_many = lambda *a, **k: (calls.append(1), inner(*a, **k))[1]
+    d1 = sched.run([Request(prompt=p, max_new=8, seed=5)])
+    assert calls and sched.stats()["prefix_hits"] == 0
+    calls.clear()
+    d2 = sched.run([Request(prompt=p.copy(), max_new=8, seed=5)])
+    st = sched.stats()
+    assert not calls, "full prefix hit must not re-prefill"
+    assert st["prefix_hits"] > 0 and st["prefix_hit_rate"] == 1.0
+    np.testing.assert_array_equal(d1[0].tokens, d2[1].tokens)
+
+
+def test_prefix_cow_partial_tail(llama):
+    """A prompt whose tail only part-fills its last page: the second serve
+    shares the full pages, COW-copies the registered tail block, and still
+    matches bit for bit."""
+    cfg, params = llama
+    rng = np.random.default_rng(5)
+    p = rng.integers(1, 100, 21).astype(np.int32)  # 2 full pages + 5-row tail
+    sched = Scheduler(
+        Engine(cfg, params, ServeConfig(max_len=64, page_size=8)),
+        slots=2, segment=4,
+    )
+    d1 = sched.run([Request(prompt=p, max_new=8, seed=6)])
+    d2 = sched.run([Request(prompt=p.copy(), max_new=8, seed=6)])
+    st = sched.stats()
+    assert st["prefix_hits"] > 0 and st["cow_copies"] >= 1
+    np.testing.assert_array_equal(d1[0].tokens, d2[1].tokens)
+
+
+def test_prefix_cache_off_never_shares(llama):
+    cfg, params = llama
+    rng = np.random.default_rng(6)
+    p = rng.integers(1, 100, 16).astype(np.int32)
+    sched = Scheduler(
+        Engine(cfg, params, ServeConfig(max_len=64, page_size=8, prefix_cache=False)),
+        slots=2, segment=4,
+    )
+    d1 = sched.run([Request(prompt=p, max_new=6, seed=0)])
+    d2 = sched.run([Request(prompt=p.copy(), max_new=6, seed=0)])
+    st = sched.stats()
+    assert st["prefix_hits"] == 0 and st["prefix_lookups"] == 0
+    np.testing.assert_array_equal(d1[0].tokens, d2[1].tokens)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: co-scheduled with decode, parity preserved
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_parity_and_liveness(llama):
+    """A 70-token admission chunked at 16 tokens/segment: the in-flight decode
+    slot must keep emitting tokens *while* the long prompt prefills (Sarathi
+    co-scheduling — no decode stall), and both requests' tokens must match
+    the unchunked slot-pool run."""
+    cfg, params = llama
+    rng = np.random.default_rng(7)
+    reqs = [
+        Request(prompt=rng.integers(1, 100, 9).astype(np.int32), max_new=40, seed=0),
+        Request(prompt=rng.integers(1, 100, 70).astype(np.int32), max_new=10, seed=1,
+                arrival_s=0.0),
+    ]
+    _, ref = _run(cfg, params, ServeConfig(max_len=128), reqs, slots=2)
+    sched = Scheduler(
+        Engine(cfg, params, ServeConfig(max_len=128, page_size=8, prefill_chunk=16)),
+        slots=2, segment=4,
+    )
+    snaps = []
+
+    def on_sync(s):
+        snaps.append([(sl.rid, len(sl.tokens or []), sl.prefill is not None)
+                      for sl in s._slot])
+
+    got = sched.run([dataclasses.replace(r) for r in reqs], on_sync=on_sync)
+    _assert_same_tokens(ref, got)
+    # liveness: find consecutive syncs where one slot was mid-chunked-prefill
+    # while another slot's token count advanced
+    # some slot prefilling at both syncs while another slot emitted tokens
+    overlapped = any(
+        any(pf_a and pf_b for (_, _, pf_a), (_, _, pf_b) in zip(a, b))
+        and any(tb > ta for (_, ta, pa), (_, tb, pb) in zip(a, b) if not (pa or pb))
+        for a, b in zip(snaps, snaps[1:])
+    )
+    assert overlapped, "decode slots must keep stepping during chunked admission"
+
+
+# ---------------------------------------------------------------------------
+# arena pressure: lazy allocation, preemption, admission guard
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_parity_tiny_arena(llama):
+    """arena_blocks far below slots*n_pages: mid-flight extensions must
+    preempt the latest admission (never the earliest — guaranteed progress)
+    and re-served requests still produce identical tokens (same seed)."""
+    cfg, params = llama
+    rng = np.random.default_rng(8)
+    reqs = _ragged_reqs(rng, [(6, 10), (13, 8), (9, 12), (17, 6)])
+    _, ref = _run(cfg, params, ServeConfig(max_len=64), reqs, slots=4)
+    sp, got = _run(cfg, params,
+                   ServeConfig(max_len=64, page_size=8, arena_blocks=10),
+                   reqs, slots=4)
+    _assert_same_tokens(ref, got)
+    assert sp.stats()["preempted"] >= 1
+
+
+def test_submit_rejects_impossible_arena_budget(llama):
+    cfg, params = llama
+    sched = Scheduler(
+        Engine(cfg, params, ServeConfig(max_len=64, page_size=8, arena_blocks=2)),
+        slots=1, segment=4,
+    )
+    with pytest.raises(ValueError, match="arena"):
+        sched.submit(Request(prompt=np.ones(30, np.int32), max_new=20))
+
+
+# ---------------------------------------------------------------------------
+# §9 fault paths on the paged layout
+# ---------------------------------------------------------------------------
+
+
+def test_paged_cache_poison_falls_back(llama):
+    """Admission-time NaN poison on a paged slot: the guard trips, the request
+    retries clean and finishes FAILED_FALLBACK_OK bit-identical to its clean
+    run; neighbours stay OK."""
+    cfg, params = llama
+    rng = np.random.default_rng(9)
+    reqs = _ragged_reqs(rng, [(6, 8), (9, 8), (7, 8)])
+    sc = ServeConfig(max_len=64, page_size=8,
+                     faults=FaultConfig(cache_nan_rids=(1,)))
+    _, clean = _run(cfg, params, ServeConfig(max_len=64), reqs)
+    _, done = _run(cfg, params, sc, reqs)
+    assert done[1].status is Status.FAILED_FALLBACK_OK
+    assert done[0].status is Status.OK and done[2].status is Status.OK
+    _assert_same_tokens(clean, done)
+
+
+def test_paged_poison_contained_under_prefix_sharing(llama):
+    """Poisoning a request whose prompt is fully prefix-shared must first
+    COW-privatize the page — the sharer reads the original bytes and stays
+    OK with clean tokens; the poisoned block is forgotten (never matchable)
+    and zeroed on release."""
+    cfg, params = llama
+    rng = np.random.default_rng(10)
+    p = rng.integers(1, 100, 16).astype(np.int32)
+    # rid 0 registers the prefix clean; rids 1 (poisoned) and 2 share it
+    sc = ServeConfig(max_len=64, page_size=8,
+                     faults=FaultConfig(cache_nan_rids=(1,)))
+    sched = Scheduler(Engine(cfg, params, dataclasses.replace(sc)),
+                      slots=2, segment=4)
+    d0 = sched.run([Request(prompt=p, max_new=8, seed=0)])
+    dd = sched.run([Request(prompt=p.copy(), max_new=8, seed=0),
+                    Request(prompt=p.copy(), max_new=8, seed=0)])
+    assert d0[0].status is Status.OK
+    assert dd[1].status is Status.FAILED_FALLBACK_OK
+    assert dd[2].status is Status.OK
+    # every delivered stream equals the clean one — poison never crossed the
+    # COW boundary into shared state
+    np.testing.assert_array_equal(dd[1].tokens, d0[0].tokens)
+    np.testing.assert_array_equal(dd[2].tokens, d0[0].tokens)
+
+
+def test_paged_chunked_admission_poison(llama):
+    """Fault injection on a chunked admission defers to prefill completion
+    (chunks would overwrite earlier poison): the request still trips the
+    guard and falls back clean."""
+    cfg, params = llama
+    rng = np.random.default_rng(11)
+    reqs = [Request(prompt=rng.integers(1, 100, 40).astype(np.int32),
+                    max_new=8, seed=0)]
+    sc = ServeConfig(max_len=64, page_size=8, prefill_chunk=16,
+                     faults=FaultConfig(cache_nan_rids=(0,)))
+    _, clean = _run(cfg, params, ServeConfig(max_len=64), reqs, slots=1)
+    _, done = _run(cfg, params, sc, reqs, slots=1)
+    assert done[0].status is Status.FAILED_FALLBACK_OK
+    np.testing.assert_array_equal(done[0].tokens, clean[0].tokens)
+
+
+# ---------------------------------------------------------------------------
+# observability: stats() NaN-safe, gauges sane
+# ---------------------------------------------------------------------------
+
+
+def test_stats_nan_safe_on_empty_run(llama):
+    cfg, params = llama
+    for sc in (ServeConfig(max_len=64), ServeConfig(max_len=64, page_size=8)):
+        sched = Scheduler(Engine(cfg, params, sc), slots=2, segment=4)
+        st = sched.stats()
+        assert math.isnan(st["prefix_hit_rate"])
+        assert math.isnan(st["hbm_bytes_per_active_request"])
+        assert st["kv_pool_bytes"] > 0 and st["kv_block_bytes"] > 0
+    # slot mode reports NaN block gauges (no blocks to count)
+    assert math.isnan(st["blocks_total"]) is False  # paged: real number
+    sched_slot = Scheduler(Engine(cfg, params, ServeConfig(max_len=64)),
+                           slots=2, segment=4)
+    assert math.isnan(sched_slot.stats()["blocks_total"])
+
+
+def test_stats_paged_gauges_after_traffic(llama):
+    cfg, params = llama
+    rng = np.random.default_rng(12)
+    sp, _ = _run(cfg, params, ServeConfig(max_len=64, page_size=8),
+                 _ragged_reqs(rng, [(6, 8), (9, 6)]), slots=2)
+    st = sp.stats()
+    assert st["hbm_bytes_per_active_request"] > 0
+    assert st["blocks_total"] == sp._layout.user_blocks
+    assert (st["blocks_live"] + st["blocks_free"] + st["blocks_cached"]
+            == st["blocks_total"])
+    # paged per-request KV footprint beats one whole slot-pool slot
+    slot_bytes = Scheduler(
+        Engine(cfg, params, ServeConfig(max_len=64)), slots=2, segment=4
+    ).stats()["kv_block_bytes"]
+    assert st["hbm_bytes_per_active_request"] < slot_bytes
+
+
+# ---------------------------------------------------------------------------
+# COW block copy preserves bytes (device-level; host invariants are
+# property-tested in test_packing_props.py)
+# ---------------------------------------------------------------------------
+
+
+def test_copy_block_preserves_bytes(llama):
+    from repro.models.cache import PagedLayout, copy_block
+
+    cfg, params = llama
+    model = build_model(cfg)
+    lay = PagedLayout.build(2, 64, 8)
+    pool = model.init_paged_pool(lay, 64)
+    rng = np.random.default_rng(13)
+    arena = {
+        name: jax.numpy.asarray(
+            rng.normal(size=a.shape).astype(np.asarray(a).dtype)
+        )
+        for name, a in pool["arena"].items()
+    }
+    src, dst = lay.reserved, lay.reserved + 1
+    out = copy_block(arena, src, dst)
+    for name, a in out.items():
+        np.testing.assert_array_equal(np.asarray(a[:, dst]),
+                                      np.asarray(arena[name][:, src]))
+        # untouched blocks identical
+        others = [b for b in range(a.shape[1]) if b != dst]
+        np.testing.assert_array_equal(np.asarray(a[:, others]),
+                                      np.asarray(arena[name][:, others]))
