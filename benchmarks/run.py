@@ -828,6 +828,179 @@ def bench_paged_serving():
           f"repeat_hit_rate={rs['prefix_hit_rate']:.2f}")
 
 
+def bench_streaming():
+    """Async streaming serving (DESIGN.md §12): delivered tok/s through the
+    AsyncEngine's per-sync token streams, goodput under seeded transient
+    decode stalls with the watchdog armed (must hold >= 0.9x of the clean
+    arm — asserted here and gated), and crash recovery: a journaled run
+    killed mid-stream must recover to completions bit-identical to the
+    clean arm (asserted; replay wall time reported, compile included).
+
+    The scheduler is reused across reps to keep its compiled programs, so
+    each rep pins a fresh rid block (rids never reuse) — the transient-stall
+    injectors are one-shot per rid and must fire in the *timed* rep, not be
+    used up by the warmup."""
+    import asyncio
+    import tempfile
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serve import (
+        AsyncEngine,
+        Engine,
+        FaultConfig,
+        Journal,
+        JournalTap,
+        Request,
+        Scheduler,
+        ServeConfig,
+        Status,
+    )
+    from repro.serve.journal import recover_into, replay
+
+    cfg = get_smoke_config("llama3_2_1b")
+    params = build_model(cfg).init(jax.random.key(0))
+    slots, segment, max_len = 4, 8, 64
+    n_req, max_new = 96, 48
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 100, 6).astype(np.int32) for _ in range(n_req)]
+
+    def requests():
+        return [
+            Request(prompt=prompts[i], max_new=max_new, seed=i) for i in range(n_req)
+        ]
+
+    async def serve(engine, rid0):
+        """Submit one rid block and stream every token back; returns
+        ({index: tokens}, delivered token count, wall seconds)."""
+        t0 = time.perf_counter()
+        streams = [engine.submit(r, rid=rid0 + i) for i, r in enumerate(requests())]
+        outs, total = {}, 0
+        for i, s in enumerate(streams):
+            toks = [t async for t in s]
+            comp = await s.completion()
+            assert comp.status is Status.OK, f"rid {comp.rid} finished {comp.status}"
+            assert toks == [int(t) for t in comp.tokens]
+            outs[i] = toks
+            total += len(toks)
+        return outs, total, time.perf_counter() - t0
+
+    def stall_plan(rid0):
+        # three deterministic one-shot 2 ms stalls per rep — a transient
+        # wedge the pool must absorb, sized a few percent of the clean wall
+        # so >= 0.9x goodput is headroom, not luck
+        return FaultConfig(
+            decode_stall_s=0.002,
+            decode_stall_rids=(rid0 + 5, rid0 + 23, rid0 + 41),
+        )
+
+    arms = ("clean", "stalled")
+    engines = {
+        arm: Engine(cfg, params, ServeConfig(max_len=max_len)) for arm in arms
+    }
+    scheds = {
+        arm: Scheduler(engines[arm], slots=slots, segment=segment) for arm in arms
+    }
+    tokens, best = {}, {}
+    rid0 = 0
+
+    async def one_rep(arm):
+        nonlocal rid0
+        block, rid0 = rid0, rid0 + n_req
+        if arm == "stalled":
+            engines[arm].sc.faults = stall_plan(block)
+        engine = AsyncEngine(
+            scheds[arm], watchdog_s=None if arm == "clean" else 10.0
+        )
+        async with engine:
+            outs, total, wall = await serve(engine, block)
+        assert total == n_req * max_new
+        if arm == "stalled":
+            fired = [r for r in stall_plan(block).decode_stall_rids
+                     if r in scheds[arm]._stall_fired]
+            assert len(fired) == 3, "stall plan injected nothing"
+        return outs, total / wall
+
+    for arm in arms:  # warmup rep per arm (compiles) — untimed
+        tokens[arm], _ = asyncio.run(one_rep(arm))
+    # interleave the timed reps so host noise (GC pauses, scheduler jitter a
+    # few hundred ms wide on shared runners) hits both arms alike; best-of-4
+    # per arm makes the ratio a property of the stalls, not the noise
+    for _ in range(4):
+        for arm in arms:
+            tokens[arm], rate = asyncio.run(one_rep(arm))
+            best[arm] = max(best.get(arm, 0.0), rate)
+    for i in range(n_req):  # stalls delay tokens, never change them
+        np.testing.assert_array_equal(tokens["stalled"][i], tokens["clean"][i])
+    goodput = best["stalled"] / best["clean"]
+    assert goodput >= 0.9, f"goodput under stalls collapsed: {goodput:.2f}x of clean"
+
+    # crash + recover differential: journal a run, kill it mid-stream (the
+    # exception fires before the sync's tap, so everything past the last
+    # fsync is lost), recover into a fresh scheduler, require bit-parity
+    class _Boom(Exception):
+        pass
+
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "journal"
+        journal = Journal(path)
+        tap = JournalTap(journal)
+        sched = scheds["clean"]  # warm programs; crashed state is discarded
+        for i, r in enumerate(requests()):
+            tap.note_submit(sched.submit(r, rid=rid0 + i), r)
+        journal.sync()
+        syncs = 0
+
+        def crash(s):
+            nonlocal syncs
+            syncs += 1
+            if syncs > 3:
+                raise _Boom()
+            tap.on_sync(s)
+
+        try:
+            sched.run(on_sync=crash)
+            raise AssertionError("crash hook never fired")
+        except _Boom:
+            pass
+        journal._fh.close()  # no close marker: the journal reads as a crash
+        t0 = time.perf_counter()
+        sched2 = Scheduler(engines["clean"], slots=slots, segment=segment)
+        journal2, completed, recovered = recover_into(path, sched2)
+        tap2 = JournalTap(journal2)
+        done = sched2.run(on_sync=tap2.on_sync)
+        tap2.on_sync(sched2)
+        journal2.close()
+        recovery_wall = time.perf_counter() - t0
+        assert recovered, "crash landed after the run finished — nothing recovered"
+        merged = {**completed, **done}
+        for i in range(n_req):
+            np.testing.assert_array_equal(
+                merged[rid0 + i].tokens, tokens["clean"][i]
+            )
+        final = replay(path)
+        assert final.closed and not final.pending
+
+    _save("bench_streaming", {
+        "stream_tok_per_s": best["clean"],
+        "stalled_tok_per_s": best["stalled"],
+        "stall_goodput": goodput,
+        "recovered_requests": len(recovered),
+        "journal_completions": len(completed),
+        "recovery_wall_s": recovery_wall,
+        "requests": n_req,
+        "max_new": max_new,
+        "slots": slots,
+        "segment": segment,
+    })
+    _emit("bench_streaming", (n_req * max_new / best["clean"]) * 1e6,
+          f"stream_tok_s={best['clean']:.0f};stalled_tok_s={best['stalled']:.0f};"
+          f"goodput={goodput:.3f};recovered={len(recovered)};"
+          f"recovery_s={recovery_wall:.2f}")
+
+
 _SHARDED_BENCH_CODE = """
 import json, time
 import jax, numpy as np
@@ -1024,6 +1197,7 @@ BENCHES = {
     "bench_admission": bench_admission,
     "bench_faults": bench_faults,
     "bench_paged_serving": bench_paged_serving,
+    "bench_streaming": bench_streaming,
     "bench_sharded_decode": bench_sharded_decode,
 }
 
@@ -1074,6 +1248,10 @@ BASELINE_METRICS = {
     # committed baseline holds the 2.0 SLO the bench itself asserts, so the
     # gate also sees lazy allocation regressing
     "bench_paged_serving": ["paged_tok_per_s", "hbm_reduction_vs_slot"],
+    # async streaming (§12): delivered tok/s is a conservative floor; the
+    # stall-goodput ratio is the SLO (>= 0.9 asserted in-bench, and the
+    # committed baseline holds 0.9 so the gate also sees a drop)
+    "bench_streaming": ["stream_tok_per_s", "stall_goodput"],
 }
 
 

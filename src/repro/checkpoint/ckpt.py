@@ -20,15 +20,73 @@ from __future__ import annotations
 
 import json
 import shutil
+import struct
 import threading
 import zlib
 from pathlib import Path
-from typing import Any, Optional, Tuple
+from typing import Any, BinaryIO, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "Checkpointer"]
+__all__ = [
+    "save",
+    "restore",
+    "latest_step",
+    "Checkpointer",
+    "append_record",
+    "read_records",
+]
+
+
+# --------------------------------------------------------------------------
+# CRC32-framed append-only record log (DESIGN.md §9, §12)
+#
+# The same integrity framing the checkpoint manifest applies per leaf file,
+# packaged for *streams*: each record is ``<u32 length><u32 crc32>payload``.
+# A crash can only ever leave a torn record at the tail — the reader stops
+# cleanly at the first truncated or CRC-corrupt frame and reports how many
+# bytes were good, so a writer reopening after a crash truncates back to the
+# clean prefix and appends from there.  ``serve/journal.py`` builds the
+# crash-safe request journal on top of this.
+# --------------------------------------------------------------------------
+
+_REC_HDR = struct.Struct("<II")  # payload byte length, crc32(payload)
+
+
+def append_record(fh: BinaryIO, payload: bytes) -> None:
+    """Append one CRC32-framed record.  Durability is the caller's business:
+    this writes into the file object's buffer — flush/fsync where the
+    consistency contract demands it (the journal does so at segment syncs)."""
+    fh.write(_REC_HDR.pack(len(payload), zlib.crc32(payload)))
+    fh.write(payload)
+
+
+def read_records(path: str | Path) -> Tuple[List[bytes], int, bool]:
+    """Read a CRC32-framed record log written by :func:`append_record`.
+
+    Returns ``(payloads, clean_bytes, clean)``: every record up to (not
+    including) the first truncated or CRC-corrupt frame, the byte offset of
+    the end of the last good record, and whether the whole file was good.
+    A torn tail is the *expected* crash artifact, not an error — the caller
+    truncates to ``clean_bytes`` before appending again."""
+    raw = Path(path).read_bytes()
+    out: List[bytes] = []
+    off = 0
+    while off < len(raw):
+        if off + _REC_HDR.size > len(raw):
+            return out, off, False  # torn header
+        n, crc = _REC_HDR.unpack_from(raw, off)
+        payload = raw[off + _REC_HDR.size : off + _REC_HDR.size + n]
+        if len(payload) < n:
+            return out, off, False  # torn payload
+        if zlib.crc32(payload) != crc:
+            # a bit flip mid-file ends replay there too: every record after
+            # it is untrustworthy (framing itself may be corrupt)
+            return out, off, False
+        out.append(payload)
+        off += _REC_HDR.size + n
+    return out, off, True
 
 
 def _flatten(tree) -> dict:

@@ -8,9 +8,20 @@ instead of one-shot generate, exposing the reliability knobs: per-request
 ``--deadline-s``, a bounded queue via ``--queue-cap`` with ``--shed-policy``,
 and a seeded chaos mode (``--fault-rate``) that NaN-poisons that fraction of
 requests' slot caches to exercise the guard + dense-fallback path.
+
+Streaming / crash-safety (DESIGN.md §12): ``--stream`` serves the same
+requests through the asyncio AsyncEngine; ``--journal PATH`` write-ahead
+journals every request event (implies ``--stream``), ``--recover`` replays a
+crashed journal first — proven completions come back verbatim, in-flight
+requests re-execute bit-identically — and ``--watchdog-s`` arms stall
+detection.  SIGINT/SIGTERM drain instead of dying mid-segment: admission
+stops, in-flight requests finish (bounded by ``--drain-timeout-s``), final
+stats print, and the journal closes clean.
 """
 
 import argparse
+import asyncio
+import signal
 
 import jax
 import numpy as np
@@ -19,7 +30,84 @@ from ..checkpoint import latest_step, restore
 from ..configs import get_config, get_smoke_config
 from ..core.pruning import prune_tree
 from ..models import build_model
-from ..serve import Engine, FaultConfig, Request, Scheduler, ServeConfig
+from ..serve import (
+    AsyncEngine,
+    Engine,
+    FaultConfig,
+    Journal,
+    Request,
+    Scheduler,
+    ServeConfig,
+)
+
+
+async def _serve_streaming(args, cfg, sched):
+    """Drive the synthetic workload through the AsyncEngine: streaming
+    consumption, optional journaling/recovery, and signal-driven drain.
+    The workload is a pure function of the rng seed, so a recovered run
+    submits exactly the requests the journal does not already prove."""
+    import os
+
+    if args.recover and os.path.exists(args.journal):
+        engine = AsyncEngine.recover(args.journal, sched, watchdog_s=args.watchdog_s)
+        print(f"recovered journal {args.journal}: "
+              f"{len(engine._completed)} completions proven, "
+              f"{len(engine.recovered_rids)} requests re-queued")
+    else:
+        journal = Journal(args.journal) if args.journal else None
+        engine = AsyncEngine(sched, journal=journal, watchdog_s=args.watchdog_s)
+
+    stop = asyncio.Event()
+    loop = asyncio.get_running_loop()
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        # drain instead of dying mid-segment: admission stops, in-flight
+        # work finishes (bounded), stats print, the journal closes clean
+        loop.add_signal_handler(sig, stop.set)
+
+    async with engine:
+        known = set(engine.recovered_rids) | set(
+            rid for rid in range(args.requests) if engine.completion_for(rid) is not None
+        )
+        rng = np.random.default_rng(0)
+        streams = []
+        for r in range(args.requests):
+            prompt = rng.integers(1, cfg.vocab, size=args.prompt_len).astype(np.int32)
+            if r in known:  # journal already owns this rid (done or re-queued)
+                streams.append(engine.stream_for(r))
+            else:
+                streams.append(engine.submit(Request(
+                    prompt=prompt, max_new=args.max_new, seed=r,
+                    deadline_s=args.deadline_s,
+                ), rid=r))
+
+        async def consume():
+            total = 0
+            for s in streams:
+                async for _ in s:
+                    total += 1
+            return total
+
+        work = asyncio.ensure_future(consume())
+        interrupt = asyncio.ensure_future(stop.wait())
+        done, _ = await asyncio.wait(
+            {work, interrupt}, return_when=asyncio.FIRST_COMPLETED
+        )
+        if interrupt in done:
+            print("signal: draining...")
+            clean = await engine.drain(args.drain_timeout_s)
+            print("drained clean" if clean
+                  else f"drain blew {args.drain_timeout_s}s; in-flight work aborted")
+            work.cancel()
+        else:
+            interrupt.cancel()
+            print(f"streamed {work.result()} tokens")
+        st = engine.stats()
+        print(f"{st['requests_completed']:.0f} completions  "
+              f"ttft p50/p99 {st['ttft_p50_s']*1e3:.0f}/{st['ttft_p99_s']*1e3:.0f}ms  "
+              f"itl p50/p99 {st['itl_p50_s']*1e3:.0f}/{st['itl_p99_s']*1e3:.0f}ms  "
+              f"journal records={st['journal_records']:.0f} syncs={st['journal_syncs']:.0f}")
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        loop.remove_signal_handler(sig)
 
 
 def main():
@@ -93,7 +181,38 @@ def main():
         "the chunks with decode segments (0 = whole-prompt prefill; "
         "requires --page-size)",
     )
+    ap.add_argument(
+        "--stream", action="store_true",
+        help="serve through the asyncio AsyncEngine (token streaming, "
+        "watchdog, clean drain on SIGINT/SIGTERM); requires --requests",
+    )
+    ap.add_argument(
+        "--journal", default=None, metavar="PATH",
+        help="write-ahead journal every request event to PATH (CRC32-framed, "
+        "fsync'd at segment syncs); implies --stream",
+    )
+    ap.add_argument(
+        "--recover", action="store_true",
+        help="replay --journal before serving: journaled completions are "
+        "honoured, in-flight requests re-execute under their original seeds",
+    )
+    ap.add_argument(
+        "--watchdog-s", type=float, default=None,
+        help="abort a segment that syncs nothing for this long as STALLED "
+        "(default: watchdog off)",
+    )
+    ap.add_argument(
+        "--drain-timeout-s", type=float, default=30.0,
+        help="on SIGINT/SIGTERM, give in-flight requests this long to finish "
+        "before aborting them (CANCELLED)",
+    )
     args = ap.parse_args()
+    if args.recover and not args.journal:
+        ap.error("--recover requires --journal")
+    if args.journal:
+        args.stream = True
+    if args.stream and args.requests <= 0:
+        ap.error("--stream/--journal require --requests N")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -130,6 +249,9 @@ def main():
             eng, slots=args.slots, queue_cap=args.queue_cap,
             shed_policy=args.shed_policy,
         )
+        if args.stream:
+            asyncio.run(_serve_streaming(args, cfg, sched))
+            return
         rng = np.random.default_rng(0)
         for r in range(args.requests):
             sched.submit(Request(

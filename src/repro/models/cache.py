@@ -59,6 +59,7 @@ __all__ = [
     "paged_shardings",
     "paged_pool_bytes",
     "paged_block_bytes",
+    "paged_host_mirror",
     "prefix_page_digests",
     "prefix_tail_digests",
 ]
@@ -453,6 +454,16 @@ def paged_block_bytes(pstate) -> int:
         int(np.prod(a.shape)) // a.shape[1] * a.dtype.itemsize
         for a in pstate["arena"].values()
     )
+
+
+def paged_host_mirror(pstate):
+    """Host snapshot of the pool's control plane — ``(table (slots, n_pages),
+    pos (slots,))`` as numpy.  The scheduler keeps exact host mirrors of both
+    (every mutation is host-driven); this fetches the device truth in one
+    tiny transfer so recovery and tests can verify the mirrors never
+    diverged (DESIGN.md §12).  The arena payload itself stays on device."""
+    table, pos = jax.device_get((pstate["table"], pstate["pos"]))
+    return np.asarray(table), np.asarray(pos)
 
 
 # --------------------------------------------------------------------------

@@ -111,48 +111,30 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, cfg: ArchConfig, params, sc: Optional[ServeConfig] = None, mesh=None):
+    def __init__(
+        self, cfg: ArchConfig, params, sc: Optional[ServeConfig] = None, mesh=None,
+        clock=None,
+    ):
         """``mesh`` makes the whole decode/serve path mesh-aware (DESIGN.md
         §8): parameters are placed under ``dist.sharding.params_shardings``
         (TP on ``model``, FSDP on ``data``), decode caches shard their batch
         dim over ``data``, and VUSA packs shard their window axis over
         ``model`` with the kernels running per-shard under ``shard_map``.  A
         1x1 mesh (or ``mesh=None``) is the degenerate single-device path —
-        same program, bit-identical tokens."""
+        same program, bit-identical tokens.
+
+        ``clock`` injects the timing source (default ``time.monotonic`` —
+        never wall clock, which jumps under NTP adjustment).  The Scheduler
+        inherits it, so engine and scheduler timings share one timeline."""
         sc = ServeConfig() if sc is None else sc
         self.cfg, self.sc = cfg, sc
         self.model = build_model(cfg)
         self.mesh = mesh
+        self._clock = clock or time.monotonic
         self._packed = None
         self._quarantined = False
         if sc.packed_weights:
-            from ..kernels.ops import mesh_axis_size  # local import: needs kernels
-            from .packed import pack_lm_weights, shard_packed, validate_packed
-
-            # pack from the host params before any device placement, then
-            # split the window axes over the model mesh axis
-            self._packed = pack_lm_weights(
-                cfg, params, sc.vusa_m, sc.vusa_a,
-                scope=sc.packed_weights, fused_mlp=sc.fused_mlp,
-                shards=mesh_axis_size(mesh, "model"),
-                # "bf16" = unquantized passthrough: the pack keeps the native
-                # param dtype, same program as before the knob existed
-                value_dtype="dense" if sc.packed_values == "bf16" else sc.packed_values,
-            )
-            f = sc.faults
-            if f is not None and (f.pack_position_flips or f.pack_value_nans):
-                from .faults import corrupt_pack_positions, corrupt_pack_values
-
-                # position flips land *before* load validation — a corrupted
-                # metadata byte must make the Engine refuse the pack here,
-                # never serve from it.  Value NaNs land *after* validation,
-                # modelling post-load in-memory corruption that only the
-                # runtime isfinite guard can catch.
-                self._packed = corrupt_pack_positions(self._packed, f)
-                validate_packed(self._packed)
-                self._packed = corrupt_pack_values(self._packed, f)
-            if mesh is not None:
-                self._packed = shard_packed(self._packed, mesh)
+            self._packed = self._build_pack(params, faults=sc.faults)
         if mesh is not None:
             from ..dist.sharding import act_rules, params_shardings
 
@@ -184,6 +166,40 @@ class Engine:
             jax.jit(self._chunk_fn, donate_argnums=(2,)) if batchable else None
         )
         self._buckets = self._make_buckets(sc)
+
+    def _build_pack(self, params, faults: Optional[FaultConfig] = None):
+        """Build (and optionally fault-corrupt, validate, and shard) a VUSA
+        pack from host ``params`` per the engine's ServeConfig.  Used at init
+        and by :meth:`reload_packed` for hot weight swaps."""
+        from ..kernels.ops import mesh_axis_size  # local import: needs kernels
+        from .packed import pack_lm_weights, shard_packed, validate_packed
+
+        sc = self.sc
+        # pack from the host params before any device placement, then
+        # split the window axes over the model mesh axis
+        packed = pack_lm_weights(
+            self.cfg, params, sc.vusa_m, sc.vusa_a,
+            scope=sc.packed_weights, fused_mlp=sc.fused_mlp,
+            shards=mesh_axis_size(self.mesh, "model"),
+            # "bf16" = unquantized passthrough: the pack keeps the native
+            # param dtype, same program as before the knob existed
+            value_dtype="dense" if sc.packed_values == "bf16" else sc.packed_values,
+        )
+        f = faults
+        if f is not None and (f.pack_position_flips or f.pack_value_nans):
+            from .faults import corrupt_pack_positions, corrupt_pack_values
+
+            # position flips land *before* load validation — a corrupted
+            # metadata byte must make the Engine refuse the pack here,
+            # never serve from it.  Value NaNs land *after* validation,
+            # modelling post-load in-memory corruption that only the
+            # runtime isfinite guard can catch.
+            packed = corrupt_pack_positions(packed, f)
+            validate_packed(packed)
+            packed = corrupt_pack_values(packed, f)
+        if self.mesh is not None:
+            packed = shard_packed(packed, self.mesh)
+        return packed
 
     # -- mesh helpers ---------------------------------------------------------
     def _mesh_ctx(self):
@@ -401,9 +417,45 @@ class Engine:
         if not self.packed_active:
             return False
         self._quarantined = True
+        self._rejit_decode()
+        return True
+
+    def _rejit_decode(self) -> None:
+        """Re-wrap the jitted decode entry points so the trace-time pack
+        binding (the pack's arrays are closed over as constants) re-binds to
+        the engine's current ``_packed`` / ``_quarantined`` state."""
         self._decode = jax.jit(self._decode_fn)
         self._decode_loop = jax.jit(self._decode_loop_fn, static_argnums=(4,))
         self._prime_loop = jax.jit(self._prime_loop_fn)
+
+    def reload_packed(self, params=None) -> bool:
+        """Hot-swap the packed decode path (DESIGN.md §12): rebuild the pack
+        from ``params`` (default: the engine's current params — e.g. after a
+        quarantine, to re-arm the packed path from known-good weights),
+        validate it, clear any quarantine, and re-jit the decode entry points
+        so the new pack binds.  No fault corruption is applied — swapped-in
+        packs are presumed clean; the runtime isfinite guard still covers
+        them.  The caller must ensure no segment is in flight (the async
+        engine drains first).  Returns False when the engine is not
+        configured for packed weights (nothing to swap)."""
+        if not self.sc.packed_weights:
+            return False
+        from .packed import validate_packed
+
+        if params is not None:
+            if self.mesh is not None:
+                from ..dist.sharding import params_shardings
+
+                params = jax.device_put(
+                    params, params_shardings(self.model.specs(), self.mesh)
+                )
+            self.params = params
+        host_params = jax.device_get(self.params)
+        packed = self._build_pack(host_params)
+        validate_packed(packed)
+        self._packed = packed
+        self._quarantined = False
+        self._rejit_decode()
         return True
 
     def _validate_tokens(self, tokens) -> None:
@@ -517,16 +569,16 @@ class Engine:
                 f"{prompts.shape[1] + max_new} exceeds max_len {self.sc.max_len}"
             )
         key = jax.random.key(self.sc.seed)
-        t0 = time.time()
+        t0 = self._clock()
         nxt, cache, key = self.prime(prompts, key, extras)
         jax.block_until_ready(nxt)
-        t_prefill = time.time() - t0
+        t_prefill = self._clock() - t0
 
-        t0 = time.time()
+        t0 = self._clock()
         if self.sc.fused:
             toks, okg, _, cache, key = self.decode_segment(nxt, cache, key, max_new - 1)
             jax.block_until_ready(toks)
-            t_decode = time.time() - t0
+            t_decode = self._clock() - t0
             tokens = np.concatenate([np.asarray(nxt), np.asarray(toks)], axis=1)
             finite = bool(np.asarray(okg).all())
         else:
@@ -537,7 +589,7 @@ class Engine:
                 out.append(np.asarray(nxt))
                 finite = finite and bool(np.asarray(ok).all())
             jax.block_until_ready(nxt)
-            t_decode = time.time() - t0
+            t_decode = self._clock() - t0
             tokens = np.concatenate(out, axis=1)
         return {
             "tokens": tokens,

@@ -18,6 +18,12 @@ tests and the goodput-under-faults benchmark are bit-reproducible:
   one step and trips the same runtime guard.
 * admission stalls            — ``wants_stall``/``stall_s`` make the
   Scheduler sleep inside the admission path, modelling a slow host.
+* decode stalls / hangs       — ``wants_decode_stall``/``wants_decode_hang``
+  stall (bounded) or hang (unbounded) the decode loop right before a
+  segment dispatch, modelling a wedged device or collective.  The stall
+  wait is interruptible, so these are what the async engine's watchdog
+  (DESIGN.md §12) trains against: a hang must convert to ``STALLED``
+  within the watchdog timeout instead of freezing the event loop.
 
 Every decision is a pure function of ``(seed, rid)`` (or an explicit rid
 list), never of wall-clock or global RNG state, so a faulted run can be
@@ -52,7 +58,15 @@ class FaultConfig:
     per-rid fault transient — the dense/fallback retry of that request runs
     clean — while ``False`` models a persistent fault that also kills the
     bounded retry.  ``stall_s`` sleeps the admission path for each request
-    selected by ``stall_rate``/``stall_rids``."""
+    selected by ``stall_rate``/``stall_rids``.
+
+    ``decode_stall_s`` stalls the *decode* loop (right before a segment
+    dispatch) for each in-flight request selected by ``decode_stall_rate``/
+    ``decode_stall_rids``; ``decode_hang_rids`` hang it outright (unbounded
+    — only a watchdog abort escapes).  ``decode_stall_once`` makes each
+    rid's stall/hang one-shot: after a watchdog re-queue the re-execution
+    runs clean, modelling a transient wedge; ``False`` models a persistent
+    one that exhausts the bounded re-queue into terminal ``STALLED``."""
 
     seed: int = 0
     pack_position_flips: int = 0
@@ -63,6 +77,11 @@ class FaultConfig:
     stall_s: float = 0.0
     stall_rate: float = 0.0
     stall_rids: Tuple[int, ...] = ()
+    decode_stall_s: float = 0.0
+    decode_stall_rate: float = 0.0
+    decode_stall_rids: Tuple[int, ...] = ()
+    decode_hang_rids: Tuple[int, ...] = ()
+    decode_stall_once: bool = True
 
     def _draw(self, rid: int, salt: int) -> float:
         return float(np.random.default_rng((self.seed, salt, rid)).random())
@@ -78,6 +97,26 @@ class FaultConfig:
         if rid in self.stall_rids:
             return True
         return self.stall_rate > 0 and self._draw(rid, 2) < self.stall_rate
+
+    def stalls_decode(self) -> bool:
+        """Cheap gate: does this plan inject any decode stall/hang at all?"""
+        return bool(
+            self.decode_hang_rids
+            or (
+                self.decode_stall_s > 0
+                and (self.decode_stall_rate > 0 or self.decode_stall_rids)
+            )
+        )
+
+    def wants_decode_stall(self, rid: int) -> bool:
+        if self.decode_stall_s <= 0:
+            return False
+        if rid in self.decode_stall_rids:
+            return True
+        return self.decode_stall_rate > 0 and self._draw(rid, 3) < self.decode_stall_rate
+
+    def wants_decode_hang(self, rid: int) -> bool:
+        return rid in self.decode_hang_rids
 
 
 # --------------------------------------------------------------------------

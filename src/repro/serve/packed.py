@@ -49,6 +49,7 @@ __all__ = [
     "lm_decode_step_packed",
     "packed_byte_ratios",
     "validate_packed",
+    "pack_fingerprint",
     "qdq_lm_params",
 ]
 
@@ -269,6 +270,30 @@ def _flat_entries(packed: Dict) -> Dict[str, Dict]:
     else:
         flat.update(packed)
     return flat
+
+
+def pack_fingerprint(packed: Dict) -> int:
+    """CRC32 over every pack entry's arrays and geometry — a cheap identity
+    for a loaded pack.  Hot swaps journal it (DESIGN.md §12) so an operator
+    can tell from the journal alone *which* pack served which tokens; two
+    packs built from the same params at the same config fingerprint the
+    same.  One host fetch per entry; never on the decode path."""
+    import zlib
+
+    crc = 0
+    flat = _flat_entries(packed)
+    for name in sorted(flat):
+        e = flat[name]
+        crc = zlib.crc32(name.encode(), crc)
+        crc = zlib.crc32(
+            repr((e["m"], e["a"], e["k"], e["c"], e.get("value_dtype", "dense"))).encode(),
+            crc,
+        )
+        for leaf in ("values", "positions", "scales"):
+            if leaf in e:
+                arr = np.asarray(jax.device_get(e[leaf]))
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes(), crc)
+    return crc
 
 
 def validate_packed(packed: Dict) -> None:

@@ -87,6 +87,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import enum
+import math
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -108,6 +109,7 @@ class Status(str, enum.Enum):
     REJECTED = "REJECTED"  # backpressure: refused at submit, or shed from the queue
     FAILED_FALLBACK_OK = "FAILED_FALLBACK_OK"  # guard trip, dense retry delivered
     FAILED = "FAILED"  # guard trip, bounded retry also tripped
+    STALLED = "STALLED"  # watchdog abort: segment hung past the stall timeout
 
 
 @dataclasses.dataclass
@@ -173,6 +175,7 @@ class _Slot:
     ttft_s: float = float("nan")
     req: Optional[Request] = None  # kept for the bounded dense-retry requeue
     prefill: Optional[_PrefillJob] = None  # paged: chunked admission in flight
+    last_emit_t: float = float("nan")  # last sync that emitted tokens (ITL)
 
     @property
     def active(self) -> bool:
@@ -207,6 +210,10 @@ class Scheduler:
         if shed_policy not in _SHED_POLICIES:
             raise ValueError(f"shed_policy must be one of {_SHED_POLICIES}, got {shed_policy!r}")
         self.eng = engine
+        # clock defaults to the ENGINE's injectable clock (monotonic unless a
+        # test swapped it), so one injection point covers engine timings and
+        # scheduler deadlines alike; an explicit `clock=` still wins
+        clock = clock or engine._clock
         self.model = engine.model
         self.slots = slots
         self.segment = segment
@@ -331,8 +338,22 @@ class Scheduler:
         self._fault_fired: set = set()  # rids whose one-shot cache fault ran
         self._counters: Dict[str, int] = dict(
             rejected=0, shed=0, timed_out=0, cancelled=0,
-            fallback=0, failed=0, quarantined=0, preempted=0,
+            fallback=0, failed=0, quarantined=0, preempted=0, stalled=0,
         )
+        # streaming/watchdog state (DESIGN.md §12).  `_abort_status` is the
+        # fail-fast flag another thread (the async engine's watchdog) sets:
+        # the run loop checks it at every sync and inside every injected
+        # stall wait, retires or re-queues the in-flight work, and returns.
+        # `_draining` stops admission — in-flight work finishes, the queue
+        # survives — for clean shutdown and hot pack swaps.  `_stall_fired`
+        # makes seeded decode stalls one-shot per rid; `_stall_retried`
+        # bounds the watchdog re-queue exactly like `_retried` bounds the
+        # dense retry: a rid aborted twice is terminal STALLED, never a loop.
+        self._abort_status: Optional[Status] = None
+        self._draining = False
+        self._stall_fired: set = set()
+        self._stall_retried: set = set()
+        self._itl: List[float] = []  # per-token inter-token latency samples
         self._ran = False  # epoch flag: True after run() so the next
         # submit()/cancel()/run() starts a fresh completion/counter epoch
         self._run_now: Optional[Callable[[], float]] = None
@@ -364,6 +385,12 @@ class Scheduler:
         self._retried = set()
         self._fallback_rids = set()
         self._fault_fired = set()
+        # _stall_fired/_stall_retried deliberately survive the epoch reset: a
+        # watchdog abort ENDS the run, so the bounded re-queue it leaves in
+        # the queue is consumed by the NEXT run() — wiping the sets here
+        # would re-fire one-shot stalls and unbound the stall retry.  Rids
+        # never reuse, so stale entries can never collide.
+        self._itl = []
         for k in self._counters:
             self._counters[k] = 0
         self._seg_steps = 0
@@ -380,11 +407,13 @@ class Scheduler:
 
     # -- submission -----------------------------------------------------------
 
-    def submit(self, req: Request) -> int:
+    def submit(self, req: Request, rid: Optional[int] = None) -> int:
         """Queue a request; returns its request id.  Under a full queue
         (``queue_cap``) the shed policy decides who pays: the newcomer is
         REJECTED, or a queued victim is shed (also REJECTED, counted under
-        ``shed``) to make room."""
+        ``shed``) to make room.  ``rid`` pins the id explicitly — journal
+        recovery re-queues crashed requests under their ORIGINAL rids so the
+        journal stream stays contiguous across the crash (DESIGN.md §12)."""
         self._maybe_reset()
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         if req.max_new < 1:  # before the budget check: a negative max_new
@@ -406,8 +435,15 @@ class Scheduler:
                     f"arena_blocks={self.eng.sc.arena_blocks}) — even an "
                     "empty pool could never hold it"
                 )
-        rid = self._next_rid
-        self._next_rid += 1
+        if rid is None:
+            rid = self._next_rid
+            self._next_rid += 1
+        else:
+            if rid in self._completions or any(r == rid for _, r, _ in self._queue) or any(
+                s.active and s.rid == rid for s in self._slot
+            ):
+                raise ValueError(f"rid {rid} is already live or terminal")
+            self._next_rid = max(self._next_rid, rid + 1)
         req = dataclasses.replace(req, prompt=prompt)
         if self.queue_cap is not None and len(self._queue) >= self.queue_cap:
             if not self._make_room(req):
@@ -462,6 +498,100 @@ class Scheduler:
                 self._cancel.add(rid)
                 return True
         return False
+
+    # -- streaming control plane (DESIGN.md §12) ------------------------------
+
+    def drain(self) -> None:
+        """Stop admission: in-flight requests finish normally, queued ones
+        stay queued, and ``run()`` returns once no slot is active.  The
+        clean-shutdown / hot-swap primitive — nothing is dropped.  Safe to
+        call from another thread mid-run (a bool flag read at sync points)."""
+        self._draining = True
+
+    def resume_admission(self) -> None:
+        """Re-open admission after :meth:`drain` (e.g. once a hot pack swap
+        finished re-jitting)."""
+        self._draining = False
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def abort(self, status: Status = Status.STALLED) -> None:
+        """Fail-fast escape hatch, set by the watchdog when a segment stalls
+        past its timeout: the run loop notices at the next interruptible
+        point (sync boundaries and every injected stall/sleep wait), deals
+        with the in-flight work and returns instead of hanging the caller.
+
+        Each in-flight request gets ONE bounded re-queue (its re-execution
+        under its own seed emits a bit-identical stream, so the consumer
+        just sees the tail arrive late); a request caught in a second abort
+        retires terminally with ``status`` — a persistent hang cannot loop.
+        Safe to call from another thread."""
+        self._abort_status = status
+
+    @property
+    def has_work(self) -> bool:
+        """True while anything is queued or in flight."""
+        return bool(self._queue) or any(s.active for s in self._slot)
+
+    def inflight_tokens(self) -> Dict[int, List[int]]:
+        """Host snapshot of every in-flight request's tokens emitted so far
+        — what a streaming frontend diffs at each ``on_sync`` to push new
+        tokens (zero device traffic: these lists are already on the host)."""
+        return {
+            s.rid: list(s.tokens)
+            for s in self._slot
+            if s.active and s.tokens is not None
+        }
+
+    def completions_so_far(self) -> Dict[int, Completion]:
+        """Snapshot of this epoch's terminal completions (usable mid-run
+        from ``on_sync``, unlike the dict ``run`` eventually returns)."""
+        return dict(self._completions)
+
+    def itl_samples(self) -> List[float]:
+        """This epoch's per-token inter-token-latency samples.  Tokens are
+        *observable* only at segment syncs, so the k tokens a slot emits at
+        one sync each get ``(sync_gap / k)`` — the mean per-token latency
+        over that segment; followers of the very first token (whose own
+        latency is the TTFT) sample 0.0, they arrived in the same batch."""
+        return list(self._itl)
+
+    def refresh_decode(self) -> None:
+        """Re-jit the segment dispatchers after an ``Engine.reload_packed``
+        hot swap.  The jitted segment bodies close over the engine's pack
+        arrays as trace-time constants — the static ``dense`` flag only
+        covers quarantine transitions, not a *new* pack — so without this a
+        swapped engine would keep serving the old pack's trace.  Only call
+        between runs or while drained (no segment in flight)."""
+        self._seg = jax.jit(
+            self._segment_fn, static_argnums=(4, 5), donate_argnums=(1, 2, 3)
+        )
+        if self.paged:
+            self._seg_paged = jax.jit(
+                self._segment_paged_fn, static_argnums=(4, 5), donate_argnums=(1, 2, 3)
+            )
+
+    def verify_paged_mirror(self) -> bool:
+        """Recovery invariant check (DESIGN.md §12): the host-side block
+        table / position mirrors must agree with the device arena's control
+        plane.  One tiny device_get of table+pos — debug/test tool, never on
+        the hot path.  True (or raises) on slot-pool schedulers."""
+        if not self.paged:
+            return True
+        from ..models.cache import paged_host_mirror
+
+        table, pos = paged_host_mirror(self._pstate)
+        for i, s in enumerate(self._slot):
+            if not (s.active and s.prefill is None):
+                continue  # free/admitting slots legitimately drift
+            if not np.array_equal(table[i], self._rows[i]) or int(pos[i]) != self._pos[i]:
+                raise AssertionError(
+                    f"paged host mirror diverged for slot {i}: "
+                    f"host pos {self._pos[i]} vs device {int(pos[i])}"
+                )
+        return True
 
     def _finish_unadmitted(
         self, rid: int, req: Request, status: Status, finish: float = float("nan")
@@ -1051,6 +1181,63 @@ class Scheduler:
                     self._cache = self._poison(self._cache, jnp.int32(i))
         self._admit_s += self._clock() - t0
 
+    def _stall_wait(self, secs: float) -> None:
+        """Sleep ``secs`` (possibly inf — a hang) in small interruptible
+        chunks, bailing the moment :meth:`abort` fires.  This is what makes
+        an injected device stall escapable: the watchdog's abort lands
+        between chunks instead of behind one long uninterruptible sleep."""
+        t0 = self._clock()
+        while self._abort_status is None:
+            left = secs - (self._clock() - t0)
+            if left <= 0:
+                return
+            self._sleep(min(left, 0.02) if math.isfinite(left) else 0.02)
+
+    def _inject_decode_stall(self, active_idx: List[int]) -> None:
+        """Seeded decode-segment stall/hang injection (DESIGN.md §12): if any
+        active rid is selected by the fault plan, the segment dispatch is
+        preceded by a host-visible stall — finite (``decode_stall_s``, the
+        slow-device model) or infinite (``decode_hang_rids``, the hung-device
+        model that only the watchdog's abort can end).  One-shot per rid by
+        default (``decode_stall_once``), so the bounded re-queue after a
+        watchdog abort runs clean — exactly like ``cache_nan_once``."""
+        f = self.eng.sc.faults
+        if f is None or not f.stalls_decode():
+            return
+        for i in active_idx:
+            rid = self._slot[i].rid
+            if f.decode_stall_once and rid in self._stall_fired:
+                continue
+            hang = f.wants_decode_hang(rid)
+            if hang or f.wants_decode_stall(rid):
+                self._stall_fired.add(rid)
+                self._stall_wait(math.inf if hang else f.decode_stall_s)
+                if self._abort_status is not None:
+                    return
+
+    def _abort_epilogue(self, now: float) -> None:
+        """The fail-fast exit path: deal with every in-flight slot, then
+        clear the flag so the next ``run`` starts clean.  First abort per
+        rid re-queues it (same seed => the re-executed stream is
+        bit-identical, consumers just see the tail late); second abort is
+        terminal ``_abort_status`` — the retry is bounded, never a loop."""
+        status = self._abort_status or Status.STALLED
+        for i, slot in enumerate(self._slot):
+            if not slot.active:
+                continue
+            if slot.rid in self._stall_retried:
+                self._counters["stalled"] += 1
+                self._retire(i, now, status)
+            else:
+                self._stall_retried.add(slot.rid)
+                rid, req = slot.rid, slot.req
+                if self.paged:
+                    self._release_slot_pages(i)
+                self._slot[i] = _Slot()
+                self._counters["preempted"] += 1
+                bisect.insort(self._queue, (req.arrival_s, rid, req))
+        self._abort_status = None
+
     def _pop_arrived(self, k: int, now: float) -> list:
         """Take up to ``k`` queued requests whose arrival time has passed:
         highest priority first, earliest arrival breaking ties (a strict
@@ -1077,6 +1264,24 @@ class Scheduler:
         for e in leftover:  # back into arrival order for the next round
             bisect.insort(self._queue, e)
         return [(rid, req) for _, rid, req in take]
+
+    def _note_emission(self, slot: _Slot, n_before: int, t: float) -> None:
+        """Record ITL samples for tokens slot emitted at this sync.  Segment
+        decoding surfaces k tokens per sync; each of the k gets the same
+        ``sync_gap / k`` sample so the series integrates to wall time.  The
+        stream's first-ever emission sets the baseline instead of sampling
+        (TTFT owns the first token); same-batch followers of the first token
+        sample 0.0.  A ``_fail_slot`` truncation can shrink ``tokens`` below
+        ``n_before`` — that is not an emission."""
+        emitted = (len(slot.tokens) if slot.tokens is not None else 0) - n_before
+        if emitted <= 0:
+            return
+        if math.isnan(slot.last_emit_t):
+            if emitted > 1:
+                self._itl.extend([0.0] * (emitted - 1))
+        else:
+            self._itl.extend([(t - slot.last_emit_t) / emitted] * emitted)
+        slot.last_emit_t = t
 
     def _retire(self, i: int, now: float, status: Status = Status.OK) -> Completion:
         slot = self._slot[i]
@@ -1147,10 +1352,15 @@ class Scheduler:
         self._run_now = now
         try:
             while self._queue or any(s.active for s in self._slot):
+                if self._abort_status is not None:
+                    self._abort_epilogue(now())
+                    break
+                if self._draining and not any(s.active for s in self._slot):
+                    break  # drained: queued requests survive for the next run
                 # admission: coalesce this round's arrived requests into free slots
                 t = now()
                 free = [i for i, s in enumerate(self._slot) if not s.active]
-                if free and self._queue:
+                if free and self._queue and not self._draining:
                     picked = self._pop_arrived(len(free), t)
                     if picked:
                         if self.paged:
@@ -1177,11 +1387,25 @@ class Scheduler:
                     if not self._queue:
                         continue  # drained; loop condition exits
                     # nothing in flight: sleep until the next request arrives
-                    # (the queue head, since the queue is arrival-sorted)
+                    # (the queue head, since the queue is arrival-sorted) —
+                    # chunked so drain()/abort() from another thread can
+                    # interrupt an arbitrarily long idle wait
                     wait = self._queue[0][0] - now()
-                    if wait > 0:
-                        self._sleep(wait)
+                    while (
+                        wait > 0
+                        and self._abort_status is None
+                        and not self._draining
+                    ):
+                        self._sleep(min(wait, 0.02))
+                        wait = self._queue[0][0] - now()
                     continue
+                # seeded decode stall/hang injection rides immediately before
+                # the dispatch; a watchdog abort fired during the stall exits
+                # here instead of dispatching the segment
+                self._inject_decode_stall(active_idx)
+                if self._abort_status is not None:
+                    self._abort_epilogue(now())
+                    break
                 # decode one segment and sync once: tokens + integrity flags
                 # come back in the same device_get — the guard costs no
                 # extra host transfer
@@ -1211,6 +1435,7 @@ class Scheduler:
                 t = now()
                 for i in active_idx:
                     slot = self._slot[i]
+                    n_before = len(slot.tokens) if slot.tokens is not None else 0
                     if slot.prefill is not None:
                         # mid-chunked-prefill: no tokens yet; only deadlines
                         # and cancellation apply at this sync
@@ -1235,6 +1460,7 @@ class Scheduler:
                         if slot.remaining == 0 or (
                             slot.eos_id is not None and first == slot.eos_id
                         ):
+                            self._note_emission(slot, n_before, t)
                             self._retire(i, t)
                             continue
                     for step in range(min(slot.remaining, self.segment)):
@@ -1249,6 +1475,7 @@ class Scheduler:
                         if (slot.eos_id is not None and tok == slot.eos_id) or slot.remaining == 0:
                             self._retire(i, t)
                             break
+                    self._note_emission(slot, n_before, t)
                     slot = self._slot[i]  # may have retired/failed above
                     if slot.active and t > slot.deadline:
                         self._counters["timed_out"] += 1
@@ -1273,6 +1500,8 @@ class Scheduler:
         lat = lat[np.isfinite(lat)]
         ttft = np.asarray([c.ttft_s for c in done], np.float64)
         ttft = ttft[np.isfinite(ttft)]
+        itl = np.asarray(self._itl, np.float64)
+        itl = itl[np.isfinite(itl)]
         decoded = sum(max(len(c.tokens) - 1, 0) for c in done)
         busy = self._decode_s + self._admit_s
 
@@ -1287,8 +1516,13 @@ class Scheduler:
             "admit_s": self._admit_s,
             "latency_p50_s": pct(lat, 50),
             "latency_p95_s": pct(lat, 95),
+            "latency_p99_s": pct(lat, 99),
             "ttft_p50_s": pct(ttft, 50),
             "ttft_p95_s": pct(ttft, 95),
+            "ttft_p99_s": pct(ttft, 99),
+            "itl_p50_s": pct(itl, 50),
+            "itl_p95_s": pct(itl, 95),
+            "itl_p99_s": pct(itl, 99),
             "slot_occupancy": self._active_slot_steps / max(self.slots * self._seg_steps, 1),
         }
         # cache observability (DESIGN.md §11) — always present, NaN where the

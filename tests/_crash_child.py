@@ -1,0 +1,83 @@
+"""Paced streaming server child for the SIGKILL crash-recovery test
+(tests/test_streaming.py::test_sigkill_crash_recovery).  Not a test.
+
+Serves a deterministic synthetic workload through the AsyncEngine with a
+write-ahead journal, decode-paced by the seeded stall injector
+(``FaultConfig.decode_stall_s``) so the parent has a wide window to SIGKILL
+it mid-stream: after jit warmup the smoke-config decode finishes in
+milliseconds, far too fast to hit reliably with a signal.  The stall only
+sleeps the host loop — the emitted tokens are bit-identical to an unpaced
+run, which is exactly what the parent's recovery differential asserts.
+
+Usage: python tests/_crash_child.py JOURNAL_PATH SEED N_REQUESTS [PACE_S]
+"""
+
+import asyncio
+import sys
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.pruning import prune_tree
+from repro.models import build_model
+from repro.serve import (
+    AsyncEngine,
+    Engine,
+    FaultConfig,
+    Journal,
+    Request,
+    Scheduler,
+    ServeConfig,
+)
+
+# the prompt-length cycle shared with tests/test_streaming.py: requests are
+# a pure function of (seed, index), so parent and child build identical ones
+PROMPT_LENS = (6, 13, 9, 17, 5, 24)
+
+
+def mk_reqs(n, seed=7, max_new=8):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            prompt=rng.integers(1, 90, size=PROMPT_LENS[i % len(PROMPT_LENS)]).astype(
+                np.int32
+            ),
+            max_new=max_new,
+            seed=i,
+        )
+        for i in range(n)
+    ]
+
+
+def build_engine(faults=None):
+    """The canonical engine of the streaming tests: pruned vusa_edge smoke,
+    dense decode, temperature sampling (seeds matter)."""
+    cfg = get_smoke_config("vusa_edge")
+    params = prune_tree(build_model(cfg).init(jax.random.key(0)), 0.85)
+    return Engine(cfg, params, ServeConfig(max_len=64, temperature=1.0, faults=faults))
+
+
+async def _serve(path, seed, n, pace):
+    eng = build_engine(
+        faults=FaultConfig(
+            decode_stall_s=pace, decode_stall_rate=1.0, decode_stall_once=False
+        )
+    )
+    sched = Scheduler(eng, slots=3)
+    async with AsyncEngine(sched, journal=Journal(path)) as engine:
+        streams = [engine.submit(r) for r in mk_reqs(n, seed=seed)]
+        for s in streams:
+            await s.completion()
+
+
+def main():
+    path, seed, n = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+    pace = float(sys.argv[4]) if len(sys.argv) > 4 else 0.25
+    asyncio.run(_serve(path, seed, n, pace))
+    print("child finished cleanly", flush=True)  # the parent expects to kill us first
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,566 @@
+"""Crash-safe async streaming serving tests (DESIGN.md §12).
+
+Covers the AsyncEngine stack end to end:
+
+* streaming parity — tokens streamed per segment sync are bit-identical to
+  a blocking ``Scheduler.run`` of the same requests, and to each request's
+  terminal Completion;
+* crash-recovery differential — a run killed mid-stream (journal holding
+  only the fsync'd prefix) recovers into completions bit-identical to a
+  crash-free run, across dense / packed / int8-quantized / paged modes;
+* watchdog — an injected decode hang converts to one bounded re-queue
+  (re-execution bit-identical) and, when persistent, to terminal STALLED
+  within the timeout instead of wedging the event loop;
+* drain / hot swap — a mid-traffic pack swap drops nothing: in-flight work
+  finishes, queued requests ride through, streams stay bit-identical;
+* the injectable engine clock (one injection point for engine timings and
+  scheduler deadlines) and NaN-safe p99/ITL stats on empty series.
+
+The real-SIGKILL differential (a paced subprocess child killed mid-stream,
+see tests/_crash_child.py) is ``slow``; set ``REPRO_CRASH_SEEDS=0,1,2`` to
+sweep workload seeds (the nightly chaos sweep does).
+"""
+
+import asyncio
+import itertools
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from _crash_child import mk_reqs  # the workload shared with the SIGKILL child
+from repro.configs import get_smoke_config
+from repro.core.pruning import prune_tree
+from repro.models import build_model
+from repro.serve import (
+    AsyncEngine,
+    Engine,
+    FaultConfig,
+    Journal,
+    JournalTap,
+    Request,
+    Scheduler,
+    ServeConfig,
+    Status,
+    replay,
+)
+
+MODES = {
+    "dense": dict(),
+    "packed": dict(packed_weights="all"),
+    "int8": dict(packed_weights="all", packed_values="int8"),
+    "paged": dict(page_size=8),
+}
+
+
+@pytest.fixture(scope="module")
+def vusa_pruned():
+    cfg = get_smoke_config("vusa_edge")
+    params = prune_tree(build_model(cfg).init(jax.random.key(0)), 0.85)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def mk_engine(vusa_pruned):
+    """Lazy per-mode engine cache: each serve mode pays its jit warmup once
+    for the whole module."""
+    cfg, params = vusa_pruned
+    cache = {}
+
+    def get(mode):
+        if mode not in cache:
+            cache[mode] = Engine(
+                cfg, params, ServeConfig(max_len=64, temperature=1.0, **MODES[mode])
+            )
+        return cache[mode]
+
+    return get
+
+
+def _run_ref(eng, reqs, slots=3):
+    """Crash-free blocking reference: the token streams every streaming /
+    recovery path must reproduce bit-for-bit."""
+    sched = Scheduler(eng, slots=slots)
+    rids = [sched.submit(r) for r in reqs]
+    done = sched.run()
+    assert all(done[r].status is Status.OK for r in rids)
+    return {r: [int(t) for t in done[r].tokens] for r in rids}
+
+
+@pytest.fixture(scope="module")
+def ref_tokens(mk_engine):
+    cache = {}
+
+    def get(mode, n=6, seed=7):
+        key = (mode, n, seed)
+        if key not in cache:
+            cache[key] = _run_ref(mk_engine(mode), mk_reqs(n, seed=seed))
+        return cache[key]
+
+    return get
+
+
+def _go(coro, timeout=300):
+    return asyncio.run(asyncio.wait_for(coro, timeout))
+
+
+async def _consume(stream):
+    toks = [t async for t in stream]
+    comp = await stream.completion()
+    return toks, comp
+
+
+# ---------------------------------------------------------------------------
+# streaming parity + SLO stats
+# ---------------------------------------------------------------------------
+
+
+def test_async_streaming_matches_blocking_run(mk_engine, ref_tokens):
+    """Streamed tokens == Completion tokens == a blocking run's tokens, per
+    request; lifetime SLO stats are populated and ordered."""
+    eng, ref = mk_engine("dense"), ref_tokens("dense")
+
+    async def go():
+        sched = Scheduler(eng, slots=3)
+        async with AsyncEngine(sched) as engine:
+            streams = [engine.submit(r) for r in mk_reqs(6)]
+            outs = [await _consume(s) for s in streams]
+            st = engine.stats()
+        return outs, st
+
+    outs, st = _go(go())
+    for rid, (toks, comp) in enumerate(outs):
+        assert comp.status is Status.OK
+        assert toks == [int(t) for t in comp.tokens]  # stream == completion
+        assert toks == ref[rid]  # stream == blocking run
+    assert st["requests_completed"] == 6
+    assert st["journal_records"] == 0  # memory-only engine
+    for k in ("ttft", "latency", "itl"):
+        p50, p99 = st[f"{k}_p50_s"], st[f"{k}_p99_s"]
+        assert np.isfinite(p50) and np.isfinite(p99) and 0 <= p50 <= p99
+
+
+def test_stats_nan_safe_on_empty():
+    """p50/p95/p99 series must read NaN when nothing completed — an idle
+    server is not an infinitely fast one.  No engine needed: the stats path
+    never touches the device."""
+
+    class _NullSched:
+        _clock = staticmethod(time.monotonic)
+
+        def stats(self):
+            # the engine's own (NaN) series must win over merged sched keys
+            return {"itl_p99_s": 0.0}
+
+        def itl_samples(self):
+            return []
+
+    engine = AsyncEngine(_NullSched())
+    st = engine.stats()
+    assert st["requests_completed"] == 0
+    for k in ("ttft_p99_s", "latency_p99_s", "itl_p50_s", "itl_p99_s"):
+        assert np.isnan(st[k])
+
+
+def test_scheduler_stats_have_p99_and_itl(mk_engine, ref_tokens):
+    eng = mk_engine("dense")
+    ref_tokens("dense")  # ensure at least one run's warmup happened
+    sched = Scheduler(eng, slots=2)
+    for r in mk_reqs(3):
+        sched.submit(r)
+    sched.run()
+    st = sched.stats()
+    for k in ("latency_p99_s", "ttft_p99_s", "itl_p50_s", "itl_p95_s", "itl_p99_s"):
+        assert k in st and np.isfinite(st[k])
+    assert st["ttft_p50_s"] <= st["ttft_p99_s"]
+    # every token after a stream's first carries exactly one ITL sample
+    # (the first token's own latency is the TTFT, not an ITL)
+    total = sum(len(c.tokens) for c in sched._completions.values())
+    assert len(sched.itl_samples()) == total - len(sched._completions)
+
+
+# ---------------------------------------------------------------------------
+# injectable clock (engine + scheduler share one injection point)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_clock_injectable(vusa_pruned, mk_engine, monkeypatch):
+    cfg, params = vusa_pruned
+    ticks = itertools.count()
+
+    def clk():
+        return float(next(ticks))
+
+    eng2 = Engine(cfg, params, ServeConfig(max_len=64), clock=clk)
+    assert eng2._clock is clk
+    # the scheduler defaults to the ENGINE's clock: one injection point
+    assert Scheduler(eng2, slots=1)._clock is clk
+    assert Scheduler(eng2, slots=1, clock=time.monotonic)._clock is time.monotonic
+
+    # generate() timings come from the injected clock, not wall time: with a
+    # unit-step clock every measured phase is an exact whole number >= 1
+    eng = mk_engine("dense")
+    monkeypatch.setattr(eng, "_clock", clk)
+    out = eng.generate(np.ones((1, 8), np.int32), max_new=4)
+    assert out["prefill_s"] >= 1.0 and out["prefill_s"] == int(out["prefill_s"])
+    assert out["decode_s"] >= 1.0 and out["decode_s"] == int(out["decode_s"])
+
+
+# ---------------------------------------------------------------------------
+# crash-recovery differential (the §12 acceptance bar)
+# ---------------------------------------------------------------------------
+
+
+class _Boom(RuntimeError):
+    """Stands in for the process dying mid-run."""
+
+
+def _crash_run(eng, reqs, path, crash_at_sync):
+    """Journal a run and kill it after ``crash_at_sync`` fsync'd syncs — the
+    exception fires BEFORE the next sync's journal tap, so everything after
+    the last fsync is lost, exactly like a real crash.  Returns nothing
+    useful: the scheduler state dies with the 'process'.  segment=2 keeps
+    syncs frequent so the crash lands mid-stream (tokens are segment-
+    independent by the parity invariant, so the reference still applies)."""
+    journal = Journal(path)
+    tap = JournalTap(journal)
+    sched = Scheduler(eng, slots=3, segment=2)
+    for r in reqs:
+        tap.note_submit(sched.submit(r), r)
+    journal.sync()  # models: the submits' durability point already passed
+    syncs = 0
+
+    def crash(s):
+        nonlocal syncs
+        syncs += 1
+        if syncs > crash_at_sync:
+            raise _Boom()
+        tap.on_sync(s)
+
+    with pytest.raises(_Boom):
+        sched.run(on_sync=crash)
+    journal._fh.close()  # no close marker, no sync: the journal reads as a crash
+
+
+@pytest.mark.parametrize("mode", list(MODES))
+def test_crash_recovery_bit_parity(mk_engine, ref_tokens, tmp_path, mode):
+    """Kill a journaled run mid-stream, recover into a fresh scheduler, and
+    require every completion — journal-proven and re-executed alike — to be
+    bit-identical to a crash-free run.  Streams re-attach via ``stream_for``
+    and replay in full."""
+    eng, ref = mk_engine(mode), ref_tokens(mode)
+    reqs = mk_reqs(6)
+    path = tmp_path / "journal"
+    _crash_run(eng, reqs, path, crash_at_sync=5)
+
+    mid = replay(path)
+    assert mid.pending, "crash too late: nothing left in flight"
+    assert mid.completed, "crash too early: no journal-proven completions"
+    assert not mid.closed  # no close marker: reads as a crash
+
+    async def recover_and_drain():
+        sched2 = Scheduler(eng, slots=3)
+        engine = AsyncEngine.recover(path, sched2)
+        assert set(engine.recovered_rids) == set(mid.pending)
+        async with engine:
+            outs = {}
+            for rid in range(len(reqs)):
+                toks, comp = await _consume(engine.stream_for(rid))
+                outs[rid] = (toks, comp)
+            st = engine.stats()
+        return outs, st
+
+    outs, st = _go(recover_and_drain())
+    for rid in range(len(reqs)):
+        toks, comp = outs[rid]
+        assert comp.status is Status.OK
+        assert toks == ref[rid], f"{mode}: rid {rid} diverged after recovery"
+    assert st["recovered_requests"] == len(mid.pending)
+    # the closed journal now proves the full crash-free history by itself
+    final = replay(path)
+    assert final.closed and final.clean and not final.pending
+    assert {rid: list(t) for rid, (_, t) in final.completed.items()} == ref
+    assert all(s is Status.OK for s, _ in final.completed.values())
+
+
+def test_recovery_from_submits_only(mk_engine, ref_tokens, tmp_path):
+    """Crash before the first post-admission sync: the journal holds only
+    submit records, recovery re-executes everything from scratch."""
+    eng, ref = mk_engine("dense"), ref_tokens("dense")
+    reqs = mk_reqs(6)
+    path = tmp_path / "journal"
+    _crash_run(eng, reqs, path, crash_at_sync=0)
+    mid = replay(path)
+    assert sorted(mid.pending) == list(range(6)) and not mid.completed
+
+    sched2 = Scheduler(eng, slots=3)
+    engine = AsyncEngine.recover(path, sched2)
+    assert engine.recovered_rids == list(range(6))
+
+    async def go():
+        async with engine:
+            return {r: await _consume(engine.stream_for(r)) for r in range(6)}
+
+    outs = _go(go())
+    assert {r: toks for r, (toks, _) in outs.items()} == ref
+
+
+def test_paged_mirror_verified_at_every_sync(mk_engine):
+    """The paged host mirror (block table + positions) must agree with the
+    device arena at every segment sync — the invariant recovery re-admission
+    relies on (DESIGN.md §12)."""
+    eng = mk_engine("paged")
+    sched = Scheduler(eng, slots=3)
+    for r in mk_reqs(6):
+        sched.submit(r)
+    checks = []
+
+    def hook(s):
+        checks.append(s.verify_paged_mirror())
+
+    done = sched.run(on_sync=hook)
+    assert checks and all(checks)
+    assert all(c.status is Status.OK for c in done.values())
+
+
+# ---------------------------------------------------------------------------
+# watchdog: injected hangs -> bounded re-queue -> terminal STALLED
+# ---------------------------------------------------------------------------
+
+
+def _uniform_reqs(seeds, plen=8, max_new=8):
+    rng = np.random.default_rng(11)
+    prompts = {s: rng.integers(1, 90, size=plen).astype(np.int32) for s in seeds}
+    return [Request(prompt=prompts[s], max_new=max_new, seed=s) for s in seeds]
+
+
+def _warm(eng, n):
+    """Pre-compile the prefill/segment programs a fresh scheduler will need
+    so watchdog timeouts measure stalls, not jit compiles.  Returns the
+    scheduler with ``n`` warmup rids consumed."""
+    sched = Scheduler(eng, slots=2)
+    for r in _uniform_reqs(range(100, 100 + n)):
+        sched.submit(r)
+    done = sched.run()
+    assert all(c.status is Status.OK for c in done.values())
+    return sched
+
+
+def test_watchdog_transient_hang_requeues_bit_identical(mk_engine, monkeypatch):
+    """A one-shot decode hang: the watchdog aborts, every in-flight request
+    gets its single bounded re-queue, the re-execution emits bit-identical
+    streams, and all requests end OK."""
+    eng = mk_engine("dense")
+    reqs = _uniform_reqs([0, 1])
+    ref = _run_ref(eng, reqs, slots=2)  # rids 0,1 on a clean scheduler
+    sched = _warm(eng, 2)
+    # the AsyncEngine allocates rids from 0 (the warmup epoch's completions
+    # were reset), so the hang targets the first submitted request
+    monkeypatch.setattr(eng.sc, "faults", FaultConfig(decode_hang_rids=(0,)))
+
+    async def go():
+        async with AsyncEngine(sched, watchdog_s=0.75) as engine:
+            streams = [engine.submit(r) for r in reqs]
+            return [await _consume(s) for s in streams]
+
+    t0 = time.monotonic()
+    outs = _go(go(), timeout=120)
+    for (toks, comp), want in zip(outs, ref.values()):
+        assert comp.status is Status.OK
+        assert toks == want  # the re-queued execution replayed bit-identically
+    assert 0 in sched._stall_retried  # the hang really fired and re-queued
+    assert time.monotonic() - t0 < 60
+
+
+def test_watchdog_persistent_hang_is_terminal_stalled(mk_engine, monkeypatch):
+    """A persistent hang exhausts the bounded re-queue: terminal STALLED
+    within ~2 watchdog windows, and the engine keeps serving afterwards."""
+    eng = mk_engine("dense")
+    (hang_req,) = _uniform_reqs([0])
+    (after_req,) = _uniform_reqs([5])
+    (ref_after,) = _run_ref(eng, _uniform_reqs([5]), slots=2).values()
+    sched = _warm(eng, 1)
+    # hang the first async-submitted request (rid 0; see transient test)
+    monkeypatch.setattr(
+        eng.sc,
+        "faults",
+        FaultConfig(decode_hang_rids=(0,), decode_stall_once=False),
+    )
+
+    async def go():
+        async with AsyncEngine(sched, watchdog_s=0.5) as engine:
+            toks, comp = await _consume(engine.submit(hang_req))
+            stalled = engine.stats()["stalled"]
+            # the stall is contained: fresh traffic still serves cleanly
+            toks2, comp2 = await _consume(engine.submit(after_req))
+        return toks, comp, stalled, toks2, comp2
+
+    t0 = time.monotonic()
+    toks, comp, stalled, toks2, comp2 = _go(go(), timeout=120)
+    assert comp.status is Status.STALLED
+    assert toks == []  # a STALLED request never streamed unproven tokens
+    assert stalled >= 1
+    assert comp2.status is Status.OK and toks2 == ref_after
+    assert time.monotonic() - t0 < 60
+
+
+# ---------------------------------------------------------------------------
+# drain / zero-downtime hot swap
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_drops_nothing(mk_engine, ref_tokens, tmp_path):
+    """A pack hot-swap mid-traffic: in-flight requests finish, queued ones
+    ride through the swap, admission is closed only while draining, and
+    every stream is bit-identical to a swap-free run (same params => same
+    pack => same tokens).  The swap fingerprint lands in the journal."""
+    eng, ref = mk_engine("packed"), ref_tokens("packed")
+    reqs = mk_reqs(6)
+    path = tmp_path / "journal"
+
+    async def go():
+        sched = Scheduler(eng, slots=3)
+        async with AsyncEngine(sched, journal=Journal(path)) as engine:
+            streams = [engine.submit(r) for r in reqs]
+            first0 = await streams[0].__anext__()  # wave 1 is mid-flight now
+            swap = asyncio.ensure_future(engine.hot_swap(timeout_s=120))
+            await asyncio.sleep(0)  # let hot_swap close admission
+            if engine.sched.draining:
+                with pytest.raises(RuntimeError, match="draining"):
+                    engine.submit(mk_reqs(7)[6])
+            assert await swap is True  # a pack was really rebuilt + re-jitted
+            outs = [await _consume(s) for s in streams]
+            outs[0] = ([first0] + outs[0][0], outs[0][1])  # re-attach the peeked token
+            late = [engine.submit(r) for r in mk_reqs(8)[6:]]  # post-swap traffic
+            outs += [await _consume(s) for s in late]
+        return outs
+
+    outs = _go(go())
+    assert all(comp.status is Status.OK for _, comp in outs)
+    for rid, (toks, _) in enumerate(outs[:6]):
+        assert toks == ref[rid], f"rid {rid} changed across the hot swap"
+    state = replay(path)
+    assert state.closed and sorted(state.completed) == list(range(8))
+    swaps = [
+        r
+        for r in _raw_records(path)
+        if r.get("t") == "swap" and isinstance(r.get("fp"), int)
+    ]
+    assert len(swaps) == 1
+
+
+def _raw_records(path):
+    from repro.checkpoint.ckpt import read_records
+
+    payloads, _, _ = read_records(path)
+    return [json.loads(p) for p in payloads]
+
+
+def test_drain_and_resume_preserves_queue(mk_engine, ref_tokens):
+    """drain() finishes in-flight work and parks the queue; resume() serves
+    the parked requests untouched."""
+    eng, ref = mk_engine("dense"), ref_tokens("dense")
+    reqs = mk_reqs(6)
+
+    async def go():
+        sched = Scheduler(eng, slots=3)
+        async with AsyncEngine(sched) as engine:
+            streams = [engine.submit(r) for r in reqs]
+            first0 = await streams[0].__anext__()
+            assert await engine.drain(timeout_s=120) is True
+            # drained: nothing in flight, but undelivered requests survive
+            assert not any(s.active for s in sched._slot)
+            engine.resume()
+            outs = [await _consume(s) for s in streams]
+            outs[0] = ([first0] + outs[0][0], outs[0][1])  # re-attach the peeked token
+        return outs
+
+    outs = _go(go())
+    assert all(comp.status is Status.OK for _, comp in outs)
+    assert [toks for toks, _ in outs] == [ref[r] for r in range(6)]
+
+
+# ---------------------------------------------------------------------------
+# real SIGKILL differential (slow; REPRO_CRASH_SEEDS sweeps workloads)
+# ---------------------------------------------------------------------------
+
+
+def _crash_seeds():
+    return [int(s) for s in os.environ.get("REPRO_CRASH_SEEDS", "7").split(",")]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", _crash_seeds())
+def test_sigkill_crash_recovery(mk_engine, ref_tokens, tmp_path, seed):
+    """The no-simulation version: a subprocess server (decode-paced so the
+    kill window is wide) is SIGKILLed once the journal proves tokens are
+    durable; this process recovers the journal and must reproduce the
+    crash-free streams bit-for-bit."""
+    path = tmp_path / "journal"
+    child = os.path.join(os.path.dirname(__file__), "_crash_child.py")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH")) if p
+    )
+    proc = subprocess.Popen(
+        [sys.executable, child, str(path), str(seed), "6"],
+        cwd=root,
+        env=env,
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+    try:
+        deadline = time.monotonic() + 300
+        while True:
+            if proc.poll() is not None:
+                pytest.fail(
+                    "child exited before the kill "
+                    f"(rc={proc.returncode}):\n{proc.communicate()[0]}"
+                )
+            if path.exists():
+                state = replay(path)
+                durable = sum(len(t) for t in state.partial.values()) + sum(
+                    len(t) for _, t in state.completed.values()
+                )
+                if durable >= 4:  # tokens provably on disk: kill mid-stream
+                    break
+            if time.monotonic() > deadline:
+                proc.kill()
+                pytest.fail(
+                    "journal never accumulated tokens:\n" + proc.communicate()[0]
+                )
+            time.sleep(0.25)
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=60)
+
+    mid = replay(path)
+    assert not mid.closed and mid.pending  # killed mid-stream, for real
+    ref = ref_tokens("dense", n=6, seed=seed)
+
+    async def go():
+        sched = Scheduler(mk_engine("dense"), slots=3)
+        engine = AsyncEngine.recover(path, sched)
+        async with engine:
+            return {r: await _consume(engine.stream_for(r)) for r in range(6)}
+
+    outs = _go(go())
+    for rid in range(6):
+        toks, comp = outs[rid]
+        assert comp.status is Status.OK
+        assert toks == ref[rid], f"seed {seed}: rid {rid} diverged after SIGKILL"
+    final = replay(path)
+    assert final.closed and not final.pending
+    assert {rid: list(t) for rid, (_, t) in final.completed.items()} == ref
