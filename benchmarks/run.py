@@ -11,6 +11,7 @@ Paper artifacts:
   fig89_pruning_sweep   Fig. 8/9 area/power efficiency vs pruning rate
 Framework micro-benchmarks:
   kernel_vusa_packed    packed-vs-dense matmul (bytes + wall time, CPU jnp)
+  bench_spec_decode     self-speculative decode: accepted-tok/s vs baseline
   bench_scheduler       host-side schedule throughput
   bench_train_decode    smoke-model jitted train/decode step wall time
   bench_admission       bucketed batched admission vs per-request admission
@@ -495,6 +496,96 @@ def bench_packed_decode():
           f"whole_vs_mlp={whole_vs_mlp:.2f}x;bytes={ratios['total']:.3f};"
           f"bytes_int8={qratios['int8']['total']:.3f};"
           f"bytes_int4={qratios['int4']['total']:.3f}")
+
+
+def bench_spec_decode():
+    """Self-speculative decoding via sparsity tiers (DESIGN.md §13):
+    accepted-tokens/s at draft lengths k in {2, 4, 8} vs the non-speculative
+    packed baseline, same weights, same 85%-sparsity verifier pack.
+
+    The weights carry the tier structure the mechanism exploits — a dense
+    core (top 1% of magnitudes), a detail tier (next 14%, scaled down), and
+    zeros — so the 99%-sparsity drafter keeps exactly the core that drives
+    most argmax decisions.  Every speculative arm's greedy tokens must be
+    bit-identical to the baseline's (the accept rule guarantees it; the
+    bench enforces it), so the only thing speculation can change is wall
+    time.  Arms are interleaved best-of-N; tok/s is the unified accounting:
+    accepted tokens / decode wall time."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+
+    # the smoke config is too small for speculation to pay (drafter and
+    # verifier dispatches cost the same at d_model=64) — widen it to where
+    # the drafter's 99%-sparsity pack is genuinely cheaper per token
+    cfg = dataclasses.replace(
+        get_smoke_config("vusa_edge"),
+        d_model=256, d_ff=1024, vocab=2048, n_heads=4, kv_heads=4,
+    )
+
+    def tiered(w):
+        w = np.asarray(w)
+        if w.ndim < 2:
+            return w
+        a = np.abs(w)
+        srt = np.sort(a.ravel())[::-1]
+        t1 = srt[max(int(0.01 * a.size) - 1, 0)]
+        t2 = srt[max(int(0.15 * a.size) - 1, 0)]
+        return np.where(a >= t1, w, np.where(a >= t2, w * 0.01, 0.0)).astype(w.dtype)
+
+    import jax.tree_util as jtu
+
+    params = jtu.tree_map(tiered, build_model(cfg).init(jax.random.key(0)))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab, (1, 6)).astype(np.int32)  # spec = B=1
+    max_new, ks = 64, (2, 4, 8)
+    engines = {
+        "base": Engine(cfg, params, ServeConfig(max_len=128, packed_weights="all")),
+        **{
+            f"k{k}": Engine(cfg, params, ServeConfig(
+                max_len=128, packed_weights="all",
+                speculative=True, draft_k=k, draft_sparsity=0.99,
+            ))
+            for k in ks
+        },
+    }
+    outs = {}
+    for name, eng in engines.items():  # compile + greedy parity check
+        outs[name] = eng.generate(prompt, max_new=max_new)
+        assert (outs[name]["tokens"] == outs["base"]["tokens"]).all(), (
+            f"{name} speculative decode diverged from the non-speculative stream"
+        )
+    best = {n: 0.0 for n in engines}
+    for _ in range(5):  # interleave trials so noise hits every arm alike
+        for name, eng in engines.items():
+            out = eng.generate(prompt, max_new=max_new)
+            best[name] = max(best[name], out["tok_per_s"])
+            outs[name] = out
+    speedups = {k: best[f"k{k}"] / best["base"] for k in ks}
+    acc = {k: outs[f"k{k}"]["acceptance_rate"] for k in ks}
+    # the SLO the feature exists for: >= 1.3x accepted-tok/s at k=4 on
+    # tier-structured weights (observed ~2.7x idle; 1.3 leaves co-tenant room)
+    assert speedups[4] >= 1.3, (
+        f"speculative k=4 speedup {speedups[4]:.2f}x below the 1.3x SLO "
+        f"(acceptance {acc[4]:.2f})"
+    )
+    _save("bench_spec_decode", {
+        "base_tok_per_s": best["base"],
+        **{f"k{k}_tok_per_s": best[f"k{k}"] for k in ks},
+        **{f"k{k}_speedup": speedups[k] for k in ks},
+        **{f"k{k}_acceptance": float(acc[k]) for k in ks},
+        "draft_sparsity": 0.99,
+        "max_new": max_new,
+    })
+    _emit("bench_spec_decode", 1e6 / max(best["k4"], 1e-9),
+          f"base_tok_s={best['base']:.0f};" +
+          ";".join(f"k{k}_tok_s={best[f'k{k}']:.0f}" for k in ks) + ";" +
+          ";".join(f"k{k}_speedup={speedups[k]:.2f}x" for k in ks) + ";" +
+          f"k4_acc={acc[4]:.2f}")
 
 
 def bench_continuous_batching():
@@ -1193,6 +1284,7 @@ BENCHES = {
     "bench_train_decode": bench_train_decode,
     "bench_decode_fused": bench_decode_fused,
     "bench_packed_decode": bench_packed_decode,
+    "bench_spec_decode": bench_spec_decode,
     "bench_continuous_batching": bench_continuous_batching,
     "bench_admission": bench_admission,
     "bench_faults": bench_faults,
@@ -1231,6 +1323,11 @@ BASELINE_METRICS = {
         "fused_tok_per_s", "fused_speedup", "whole_tok_per_s",
         "int8_tok_per_s", "int4_tok_per_s",
     ],
+    # self-speculative decoding (§13): the k=4 speedup baseline holds the
+    # 1.3x SLO the bench itself asserts (observed ~2.7x idle), so the gate
+    # also sees the speculative advantage collapsing; the tok/s entry is a
+    # conservative machine-relative floor like the other throughput gates
+    "bench_spec_decode": ["k4_speedup", "k4_tok_per_s"],
     "bench_continuous_batching": ["sched_tok_per_s", "speedup_vs_oneshot"],
     "bench_admission": ["batched_tok_per_s", "speedup_vs_sequential"],
     # sharded decode on 8 forced CPU devices: collectives are pure overhead

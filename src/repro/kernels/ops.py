@@ -311,10 +311,13 @@ def _tune_key(
     # entry from one mode silently drove the other
     # value_dtype must be explicit: int8 and int4 packs share the jnp int8
     # array dtype, so str(dtype) alone would collide their cache entries
+    # The REPRO_VUSA_KBLK override is part of the key: an entry tuned while
+    # the override was set (or cleared) must not be served after the env
+    # changes mid-process
     return (
         xf.shape[-1], p.values.shape[2], p.m, xf.shape[0],
         str(p.values.dtype), p.value_dtype, interp, jax.default_backend(),
-        reconstruct, slot_chunk,
+        reconstruct, slot_chunk, os.environ.get("REPRO_VUSA_KBLK", ""),
     )
 
 
@@ -432,7 +435,7 @@ def _fused_tune_key(
         "fused", xf.shape[-1], down_t.k, xf.shape[0],
         gate.values.shape[2], up.values.shape[2], down_t.values.shape[2], gate.m,
         str(gate.values.dtype), gate.value_dtype, interp, jax.default_backend(),
-        reconstruct, slot_chunk,
+        reconstruct, slot_chunk, os.environ.get("REPRO_VUSA_KBLK", ""),
     )
 
 

@@ -127,6 +127,21 @@ def main():
         "per-window fp32 scales and dequant fused into the kernels",
     )
     ap.add_argument("--sparsity", type=float, default=None)
+    ap.add_argument(
+        "--speculative", action="store_true",
+        help="self-speculative decoding (DESIGN.md §13): a ~99%%-sparsity "
+        "pack of the SAME weights drafts --draft-k greedy tokens per round "
+        "and one batched dispatch of the configured path verifies them; "
+        "greedy output is bit-identical to non-speculative decode",
+    )
+    ap.add_argument(
+        "--draft-k", type=int, default=4,
+        help="speculative draft length (tokens drafted per verify round)",
+    )
+    ap.add_argument(
+        "--draft-sparsity", type=float, default=0.99,
+        help="magnitude-pruning sparsity of the drafter pack",
+    )
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
@@ -213,6 +228,9 @@ def main():
         args.stream = True
     if args.stream and args.requests <= 0:
         ap.error("--stream/--journal require --requests N")
+    if args.speculative and args.requests == 0 and args.batch != 1:
+        ap.error("--speculative one-shot generate serves --batch 1 "
+                 "(use --requests N for batched speculative serving)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -233,6 +251,12 @@ def main():
         print(f"mesh {dict(mesh.shape)} over {len(mesh.devices.flat)} devices")
     faults = FaultConfig(cache_nan_rate=args.fault_rate) if args.fault_rate > 0 else None
     max_len = args.prompt_len + args.max_new + 8
+    if args.speculative:
+        # speculative rounds write up to draft_k rows past the emission
+        # budget before rejection masks them; the scheduler additionally
+        # budgets a full segment span (segment * (draft_k + 1) rows) of
+        # worst-case growth per sync
+        max_len += 8 * args.draft_k if args.requests > 0 else args.draft_k
     if args.page_size > 0:  # §11: page size must divide max_len
         max_len = -(-max_len // args.page_size) * args.page_size
     eng = Engine(cfg, params, ServeConfig(max_len=max_len,
@@ -242,6 +266,9 @@ def main():
                                           arena_blocks=args.arena_blocks,
                                           prefix_cache=args.prefix_cache,
                                           prefill_chunk=args.prefill_chunk,
+                                          speculative=args.speculative,
+                                          draft_k=args.draft_k,
+                                          draft_sparsity=args.draft_sparsity,
                                           faults=faults),
                  mesh=mesh)
     if args.requests > 0:
@@ -263,6 +290,10 @@ def main():
         print(f"{st['requests']} completions  {st['sustained_tok_per_s']:.0f} tok/s  "
               f"latency p50 {st['latency_p50_s']*1e3:.0f}ms  "
               f"ttft p50 {st['ttft_p50_s']*1e3:.0f}ms")
+        if args.speculative:
+            print(f"  speculative: acceptance {st['acceptance_rate']:.2f}  "
+                  f"accepted tok/s {st['tok_per_s']:.0f}  "
+                  f"proposed={st['spec_proposed']} accepted={st['spec_accepted']}")
         print("  " + "  ".join(
             f"{k}={st[k]}" for k in
             ("rejected", "shed", "timed_out", "cancelled", "fallback", "failed",
@@ -283,6 +314,10 @@ def main():
     out = eng.generate(prompts, max_new=args.max_new)
     print(f"prefill {out['prefill_s']*1e3:.1f}ms  decode {out['decode_s']*1e3:.1f}ms  "
           f"{out['tok_per_s']:.0f} tok/s")
+    if args.speculative:
+        print(f"speculative: acceptance {out['acceptance_rate']:.2f}  "
+              f"rounds={out['spec_rounds']} proposed={out['spec_proposed']} "
+              f"accepted={out['spec_accepted']}")
 
 
 if __name__ == "__main__":

@@ -328,6 +328,32 @@ def paged_scatter_token(pstate, new_rows):
     return {"arena": arena, "table": table, "pos": pos + 1}
 
 
+def paged_scatter_rows(pstate, new_rows, start, advance):
+    """Scatter ``S`` consecutive KV rows per slot into the arena — the write
+    half of a *speculative* round (DESIGN.md §13), hoisted outside the slot
+    vmap like :func:`paged_scatter_token`.  ``new_rows`` holds, per arena
+    leaf ``name``, a ``f"{name}_new"`` entry of shape ``(slots, L, 1, S,
+    ...)`` — the verifier rows for positions ``start[i] .. start[i]+S-1``.
+    All S rows are written (the rejected tail mirrors the contiguous pool,
+    where stale-but-finite rows sit masked past ``pos`` until overwritten);
+    ``advance`` (slots,) is each slot's accepted count ``nem``, so the new
+    position is ``start + advance``.  Rows past a slot's table coverage
+    drop — identical clamp semantics to the single-token scatter."""
+    table, pos = pstate["table"], pstate["pos"]
+    n_pages = table.shape[1]
+    page = _page_of(pstate)
+    S = next(iter(new_rows.values())).shape[3]
+    q = start[:, None] + jnp.arange(S)[None, :]  # (slots, S) absolute rows
+    pg = jnp.clip(q // page, 0, n_pages - 1)
+    blk = jnp.take_along_axis(table, pg, axis=1)  # (slots, S)
+    off = q % page
+    arena = {}
+    for name, a in pstate["arena"].items():
+        rows = jnp.moveaxis(new_rows[name + "_new"][:, :, 0], 0, 1)  # (L, slots, S, ...)
+        arena[name] = a.at[:, blk, off].set(rows.astype(a.dtype), mode="drop")
+    return {"arena": arena, "table": table, "pos": pos + advance}
+
+
 def _page_of(pstate) -> int:
     return next(iter(pstate["arena"].values())).shape[2]
 

@@ -199,7 +199,20 @@ def _lm_decode_layer(lp, x, cache_l, cfg, pos):
 
 
 def lm_decode_step(params, token, cache, cfg):
-    """token: (B, 1) int32.  Returns (logits (B, 1, V), new cache).
+    """token: (B, s) int32 (s = 1 normal decode; s > 1 speculative verify).
+    Returns (logits (B, s, V), new cache).
+
+    With ``s > 1`` the step runs as an unrolled chain of the exact
+    single-token step inside the one dispatch.  This is deliberate: a
+    batched ``(B, s)`` pass through the layers is NOT bit-identical to
+    ``s`` sequential steps — XLA picks different gemm accumulation orders
+    for different row counts (measured: the lm-head gemm with M=6 vs M=1
+    under jit differs in the last ulp) — while chaining the identical
+    ``s = 1`` graph is parity by construction.  ``s`` is small and static
+    (``draft_k + 1``), so the unroll is cheap to trace; the speculative win
+    is one host dispatch per *round* instead of per token (DESIGN.md §13).
+    Multi-token mode requires a contiguous cache (not paged) — the paged
+    scheduler gathers a contiguous per-slot view first.
 
     ``cache`` may be the paged per-slot view (DESIGN.md §11): ``{"k"/"v":
     (L, n_blocks, page, ...) arena leaves, "table": (n_pages,), "pos": ()}``.
@@ -207,6 +220,16 @@ def lm_decode_step(params, token, cache, cfg):
     dense cache, and the returned tree carries the pending KV rows
     (``k_new``/``v_new``, stacked (L, 1, 1, ...)) for the caller to scatter
     into the shared arena — the step itself never writes arena state."""
+    if token.shape[1] > 1:
+        assert "table" not in cache, (
+            "multi-token decode needs a contiguous cache; gather the paged "
+            "view first (serve/scheduler.py)"
+        )
+        logits = []
+        for i in range(token.shape[1]):
+            lg, cache = lm_decode_step(params, token[:, i : i + 1], cache, cfg)
+            logits.append(lg)
+        return jnp.concatenate(logits, axis=1), cache
     x = _embed_tokens(params, token, cfg)
     pos = cache["pos"]
     table = cache.get("table")

@@ -516,14 +516,14 @@ def attention(
 
 def attention_decode(
     p: dict,
-    x: jax.Array,  # (B, 1, d)
+    x: jax.Array,  # (B, s, d) — s = 1 normal decode; s > 1 speculative verify
     cfg,
     cache: dict,  # {"k": (B, S_max, kvh, hd), "v": ..., "pos": int32 scalar}
     window: int = 0,  # >0: ring cache of this size (local attention)
     chunked: bool = False,  # True = paper-baseline flash scan (see DECODE_CHUNKED)
     wmm=None,  # optional weight-matmul override (see _project_qkv)
 ) -> tuple[jax.Array, dict]:
-    """Single-token decode against a (ring) KV cache.
+    """Decode against a (ring) KV cache.
 
     The cache may also be *paged* (DESIGN.md §11): ``{"k": (n_blocks, page,
     kvh, hd), "v": ..., "table": (n_pages,) int32, "pos": scalar}``.  The
@@ -534,8 +534,26 @@ def attention_decode(
     new K/V row as pending writes (``k_new``/``v_new``) instead of a full
     cache: the caller scatters them into the shared arena outside its slot
     vmap.  Ring caches (``window > 0``) are never paged — recurrent/local
-    families keep the dense per-slot pool."""
-    b, _, d = x.shape
+    families keep the dense per-slot pool.
+
+    With ``s > 1`` (speculative verify, DESIGN.md §13) the ``s`` tokens
+    occupy positions ``pos .. pos+s-1`` and their K/V rows are all written
+    before attending.  The attend itself runs one query row at a time with
+    exactly the single-token shapes: a batched multi-row attend accumulates
+    its contractions in a different order than the Sq=1 dispatch and is NOT
+    bitwise against sequential decode (measured: last-ulp drift at Sq=6).
+    Per row ``i`` the causal mask at ``q_pos = pos+i`` intersects the
+    shared ``slots <= pos+s-1`` validity down to ``slots <= pos+i`` —
+    exactly the sequential step's allow set — and masked-but-already-
+    written future rows contribute exact zeros (``exp(-inf - m) == 0``),
+    so each row is bit-identical to the sequential single-token step.
+    Bit-parity of the *surrounding* matmuls is the caller's contract:
+    ``wmm`` must be row-stable across row counts (the VUSA Pallas appliers
+    are; XLA gemms in general are not — the dense path chains single-token
+    steps instead, see ``lm_decode_step``).  Multi-token mode requires a
+    contiguous cache (``window == 0``, not paged); the paged scheduler
+    gathers a contiguous view first."""
+    b, s, d = x.shape
     nh, kvh, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
     pos = cache["pos"]  # scalar int32: number of tokens already in cache
     paged = "table" in cache
@@ -549,6 +567,38 @@ def attention_decode(
     else:
         k_cache, v_cache = cache["k"], cache["v"]
         s_max = k_cache.shape[1]
+    if s > 1:
+        assert window == 0 and not paged, (
+            "multi-token decode needs a contiguous full-attention cache"
+        )
+        positions = pos + jnp.arange(s)
+        q, k_new, v_new = _project_qkv(p, x, cfg, positions, wmm=wmm)
+        # row-index writes (drop past max_len) — a clamped dynamic slice near
+        # the cache end would silently shift the whole write window
+        k = k_cache.at[:, positions].set(k_new.astype(k_cache.dtype), mode="drop")
+        v = v_cache.at[:, positions].set(v_new.astype(v_cache.dtype), mode="drop")
+        slots = jnp.arange(s_max)
+        q = q.reshape(b, s, kvh, nh // kvh, hd)
+        mask = MaskSpec("causal")
+        rows = []
+        for i in range(s):  # s = draft_k + 1: small, static — unroll is free
+            qi = q[:, i : i + 1]
+            pi = positions[i][None]
+            valid_i = slots <= pos + i
+            if chunked or not FLAGS["decode_direct"]:
+                rows.append(_flash_attend(
+                    qi, k, v, mask, pi, slots, kv_valid=valid_i,
+                    q_chunk=1, kv_chunk=min(512, s_max),
+                ))
+            else:
+                rows.append(_direct_attend(qi, k, v, mask, pi, slots, valid_i))
+        out = jnp.concatenate(rows, axis=1)
+        out = out.reshape(b, s, nh, hd)
+        if wmm is None:
+            y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+        else:
+            y = wmm("wo", out.reshape(b, s, nh * hd)).astype(x.dtype)
+        return y, {"k": k, "v": v, "pos": pos + s}
     q, k_new, v_new = _project_qkv(p, x, cfg, pos[None], wmm=wmm)
     slot = jnp.where(window > 0, pos % s_max, pos)
     k = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))

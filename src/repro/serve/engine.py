@@ -80,6 +80,15 @@ class ServeConfig:
     # validation, value NaNs after); cache poisoning and admission stalls
     # are consumed by the Scheduler per admitted request.
     faults: Optional[FaultConfig] = None
+    # self-speculative decoding via sparsity tiers (DESIGN.md §13): the SAME
+    # weights magnitude-pruned at ``draft_sparsity`` and packed at
+    # scope="all" draft ``draft_k`` greedy tokens per round; the configured
+    # full-quality path verifies all of them in ONE multi-token dispatch and
+    # the longest matching prefix is accepted.  Greedy speculative decode is
+    # token-bit-identical to non-speculative decode.
+    speculative: bool = False
+    draft_k: int = 4
+    draft_sparsity: float = 0.99
 
     def __post_init__(self):
         if self.packed_weights is True:
@@ -108,6 +117,17 @@ class ServeConfig:
                     f"prefill_chunk {self.prefill_chunk} must be a multiple of "
                     f"page_size {self.page_size}"
                 )
+        if self.speculative:
+            if self.draft_k < 1:
+                raise ValueError(f"draft_k must be >= 1, got {self.draft_k}")
+            if not (0.0 <= self.draft_sparsity < 1.0):
+                raise ValueError(
+                    f"draft_sparsity must be in [0, 1), got {self.draft_sparsity}"
+                )
+            if not self.fused:
+                raise ValueError(
+                    "speculative decoding requires the fused decode path"
+                )
 
 
 class Engine:
@@ -135,6 +155,14 @@ class Engine:
         self._quarantined = False
         if sc.packed_weights:
             self._packed = self._build_pack(params, faults=sc.faults)
+        self._draft_packed = None
+        if sc.speculative:
+            if cfg.family != "dense":
+                raise ValueError(
+                    "speculative decoding requires the dense family "
+                    "(the drafter is a VUSA pack of the same weights)"
+                )
+            self._draft_packed = self._build_draft_pack(params)
         if mesh is not None:
             from ..dist.sharding import act_rules, params_shardings
 
@@ -144,6 +172,7 @@ class Engine:
         self.params = params
         self._decode = jax.jit(self._decode_fn)
         self._decode_loop = jax.jit(self._decode_loop_fn, static_argnums=(4,))
+        self._spec_loop = jax.jit(self._spec_loop_fn, static_argnums=(4,))
         self._prime_loop = jax.jit(self._prime_loop_fn)
         self._prefill = jax.jit(self._prefill_fn) if cfg.family in (
             "dense", "moe", "vlm", "encdec") else None
@@ -197,6 +226,32 @@ class Engine:
             packed = corrupt_pack_positions(packed, f)
             validate_packed(packed)
             packed = corrupt_pack_values(packed, f)
+        if self.mesh is not None:
+            packed = shard_packed(packed, self.mesh)
+        return packed
+
+    def _build_draft_pack(self, params):
+        """Build the drafter: the SAME weights magnitude-pruned at
+        ``draft_sparsity`` and packed whole (scope="all") — a fraction of the
+        verifier pack's bytes, since the job count per window row scales
+        with the surviving nonzeros (the paper's virtual upscaling).
+        Magnitude pruning nests, so the drafter's weights are a subset of an
+        already-pruned verifier's.  Values stay unquantized: drafter
+        precision only moves the acceptance rate, never correctness (every
+        emitted token comes out of the verifier), and no fault corruption is
+        ever applied — the drafter is not the pack the fault plan targets."""
+        from ..core.pruning import prune_tree
+        from ..kernels.ops import mesh_axis_size
+        from .packed import pack_lm_weights, shard_packed
+
+        sc = self.sc
+        drafted = prune_tree(params, sc.draft_sparsity)
+        packed = pack_lm_weights(
+            self.cfg, drafted, sc.vusa_m, sc.vusa_a,
+            scope="all", fused_mlp=sc.fused_mlp,
+            shards=mesh_axis_size(self.mesh, "model"),
+            value_dtype="dense",
+        )
         if self.mesh is not None:
             packed = shard_packed(packed, self.mesh)
         return packed
@@ -303,6 +358,141 @@ class Engine:
             body, (token, cache, key), None, length=steps
         )
         return toks.T, okg.T, token, cache, key  # (B, steps) each
+
+    # -- self-speculative decoding (DESIGN.md §13) ----------------------------
+    def _spec_round_impl(self, params, token, cache, kd, packed):
+        """One draft/verify round at B=1: draft ``draft_k`` greedy tokens
+        with the cheap high-sparsity pack, verify the whole draft (pending
+        token + k drafts) in ONE multi-token dispatch of the configured
+        full-quality path, accept the longest matching prefix.
+
+        Returns ``(pending (1,1), cache, kd, emit (S,), nem (), okp (S,))``
+        with ``S = draft_k + 1``: ``emit[:nem]`` are the tokens emitted this
+        round (1 <= nem <= S; the final one is the verifier's own sample
+        past the matched prefix and becomes the next pending token), ``okp``
+        the per-position verifier integrity flags.
+
+        Bit-parity with non-speculative decode is by construction:
+
+        * The drafter writes its KV rows at ``pos..pos+k-1``, but the
+          verifier — after rewinding ``pos`` — rewrites ALL of rows
+          ``pos..pos+k`` before attending, so verifier logits are provably
+          independent of drafter cache content (a corrupt drafter can only
+          lower the acceptance rate, never change an emitted token).
+        * Rejected positions need no KV rollback: setting the new ``pos`` to
+          ``pos + nem`` masks rows past it via the ``slots <= pos`` validity
+          (stale rows are finite and get overwritten when reached again).
+        * The PRNG key splits once per EMITTED token — exactly the
+          non-speculative sequence — so sampled decode is bit-identical too:
+          position i's logits equal the sequential step's (multi-token
+          parity) and its draw consumes the same subkey.
+        """
+        from .packed import lm_decode_step_packed
+
+        k = self.sc.draft_k
+        S = k + 1
+        pos0 = cache["pos"]
+        with self._mesh_ctx():
+
+            def draft_body(carry, _):
+                tok, c = carry
+                logits, c = lm_decode_step_packed(
+                    params, self._draft_packed, tok, c, self.cfg, mesh=self.mesh
+                )
+                nxt = jnp.argmax(
+                    logits[:, -1].astype(jnp.float32), axis=-1
+                ).astype(jnp.int32)
+                return (nxt[:, None], c), nxt
+
+            (_, cache), drafts = jax.lax.scan(
+                draft_body, (token, cache), None, length=k
+            )
+            seq = jnp.concatenate([token, jnp.moveaxis(drafts, 0, 1)], axis=1)
+            cache = {**cache, "pos": pos0}  # rewind: verifier rewrites rows pos0..pos0+k
+            if packed is not None:
+                logits, cache = lm_decode_step_packed(
+                    params, packed, seq, cache, self.cfg, mesh=self.mesh
+                )
+            else:
+                logits, cache = self.model.decode_step(params, seq, cache)
+        logits = logits.astype(jnp.float32)  # (1, S, V)
+        okp = jnp.isfinite(logits).all(axis=-1)[0]  # (S,)
+        if self.mesh is not None:
+            # same replication pin as _decode_impl: sampling must stay
+            # bit-identical at every mesh shape (DESIGN.md §8)
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(self.mesh, PartitionSpec())
+            )
+        # sequential accept loop (unrolled, S is small): position i is
+        # emitted iff drafts 1..i all matched; the key only advances for
+        # emitted positions, so the surviving stream replays the
+        # non-speculative split sequence exactly
+        emit = jnp.zeros((S,), jnp.int32)
+        accept = jnp.bool_(True)
+        nem = jnp.int32(0)
+        for i in range(S):
+            nk, sub = jax.random.split(jax.random.wrap_key_data(kd))
+            if self.sc.temperature > 0:
+                v = jax.random.categorical(sub, logits[0, i] / self.sc.temperature)
+            else:
+                v = jnp.argmax(logits[0, i], axis=-1)
+            v = v.astype(jnp.int32)
+            emit = emit.at[i].set(jnp.where(accept, v, 0))
+            kd = jnp.where(accept, jax.random.key_data(nk), kd)
+            nem = nem + accept.astype(jnp.int32)
+            if i < k:
+                accept = jnp.logical_and(accept, v == seq[0, i + 1])
+            else:
+                accept = jnp.bool_(False)
+        cache = {**cache, "pos": pos0 + nem}
+        pending = jnp.take(emit, nem - 1)[None, None]  # (1, 1)
+        return pending, cache, kd, emit, nem, okp
+
+    def _spec_round_fn(self, params, token, cache, kd):
+        """Speculative round on the engine's configured verifier path:
+        packed when loaded and not quarantined, dense otherwise."""
+        packed = None if self._quarantined else self._packed
+        return self._spec_round_impl(params, token, cache, kd, packed)
+
+    def _spec_round_dense_fn(self, params, token, cache, kd):
+        """Speculative round with the verifier forced dense (quarantine
+        fallback).  The drafter keeps its own pack — it was built and
+        validated separately, and verification guards every emission —
+        so fallback tokens stay dense-bit-identical while still drafting."""
+        return self._spec_round_impl(params, token, cache, kd, None)
+
+    def _spec_loop_fn(self, params, token, cache, kd, budget: int):
+        """Fused speculative decode: while_loop over draft/verify rounds
+        until ``budget`` tokens are emitted — ONE dispatch for the whole
+        generation, like the non-speculative fused scan.  Each round emits
+        at least one token, so the loop is bounded by ``budget`` rounds.
+
+        The emit/ok buffers carry ``budget + S`` entries: a round writes its
+        full S-wide window at the current count and only the first ``nem``
+        entries are valid — the next round's window starts there and
+        overwrites the rejected tail, so garbage only ever lives past the
+        final count, beyond what the host reads."""
+        S = self.sc.draft_k + 1
+        buf = jnp.zeros((budget + S,), jnp.int32)
+        okb = jnp.ones((budget + S,), bool)
+
+        def cond(st):
+            return st[4] < budget
+
+        def body(st):
+            token, cache, kd, buf, count, okb, rounds = st
+            token, cache, kd, emit, nem, okp = self._spec_round_fn(
+                params, token, cache, kd
+            )
+            buf = jax.lax.dynamic_update_slice(buf, emit, (count,))
+            okb = jax.lax.dynamic_update_slice(okb, okp, (count,))
+            return (token, cache, kd, buf, count + nem, okb, rounds + 1)
+
+        st = (token, cache, kd, buf, jnp.int32(0), okb, jnp.int32(0))
+        token, cache, kd, buf, count, okb, rounds = jax.lax.while_loop(cond, body, st)
+        return buf, okb, count, rounds, token, cache, kd
 
     def _prime_loop_fn(self, params, prompts, cache, key):
         """Recurrent-family prompt priming: scan the prompt through decode
@@ -426,6 +616,7 @@ class Engine:
         the engine's current ``_packed`` / ``_quarantined`` state."""
         self._decode = jax.jit(self._decode_fn)
         self._decode_loop = jax.jit(self._decode_loop_fn, static_argnums=(4,))
+        self._spec_loop = jax.jit(self._spec_loop_fn, static_argnums=(4,))
         self._prime_loop = jax.jit(self._prime_loop_fn)
 
     def reload_packed(self, params=None) -> bool:
@@ -555,18 +746,37 @@ class Engine:
         Thin wrapper over ``prime`` + one full-length ``decode_segment``
         (a single-request schedule with one segment); the seed per-token
         host loop survives behind ``ServeConfig.fused = False`` as the
-        parity oracle.  ``tok_per_s`` counts only the ``max_new - 1``
-        decoded tokens on both paths (the first token comes out of prime
-        and is billed to ``prefill_s``).
+        parity oracle.  ``tok_per_s`` is the canonical serve metric
+        (``serve.metrics.tok_per_s``): ACCEPTED tokens beyond the first
+        (prefill-billed) one over decode wall time — identical on every
+        path, speculative included.
+
+        With ``ServeConfig.speculative`` (B=1 only) decode runs the fused
+        draft/verify while_loop — still one dispatch — and the result dict
+        additionally reports ``spec_rounds`` / ``spec_proposed`` /
+        ``spec_accepted`` / ``acceptance_rate``.
         """
+        from .metrics import acceptance_rate, tok_per_s
+
         b = prompts.shape[0]
-        if self._prefill is not None and prompts.shape[1] + max_new > self.sc.max_len:
+        headroom = self.sc.draft_k if self.sc.speculative else 0
+        if self._prefill is not None and (
+            prompts.shape[1] + max_new + headroom > self.sc.max_len
+        ):
             # without this, decode past max_len silently overwrites the last
             # KV row (attention_decode's dynamic_update_slice clamps its
-            # write index) and corrupts every later token
+            # write index) and corrupts every later token; a speculative
+            # round additionally writes up to draft_k rows past the budget
             raise ValueError(
-                f"prompt({prompts.shape[1]}) + max_new({max_new}) = "
-                f"{prompts.shape[1] + max_new} exceeds max_len {self.sc.max_len}"
+                f"prompt({prompts.shape[1]}) + max_new({max_new}) + "
+                f"spec headroom({headroom}) = "
+                f"{prompts.shape[1] + max_new + headroom} exceeds max_len "
+                f"{self.sc.max_len}"
+            )
+        if self.sc.speculative and b != 1:
+            raise ValueError(
+                f"speculative generate serves B=1 (got batch {b}); the "
+                "accept length is per-request — batch through the Scheduler"
             )
         key = jax.random.key(self.sc.seed)
         t0 = self._clock()
@@ -575,6 +785,29 @@ class Engine:
         t_prefill = self._clock() - t0
 
         t0 = self._clock()
+        if self.sc.speculative:
+            buf, okb, count, rounds, *_ = self._spec_loop(
+                self.params, nxt, cache, jax.random.key_data(key), max_new - 1
+            )
+            jax.block_until_ready(buf)
+            t_decode = self._clock() - t0
+            toks = np.asarray(buf)[: max_new - 1]
+            tokens = np.concatenate([np.asarray(nxt), toks[None]], axis=1)
+            finite = bool(np.asarray(okb)[: max_new - 1].all())
+            count, rounds = int(count), int(rounds)
+            k = self.sc.draft_k
+            return {
+                "tokens": tokens,
+                "finite": finite,
+                "prefill_s": t_prefill,
+                "decode_s": t_decode,
+                "tok_per_s": tok_per_s(max_new - 1, t_decode),
+                "spec_rounds": rounds,
+                "spec_proposed": rounds * k,
+                # each round emits 1 verifier token + (nem-1) accepted drafts
+                "spec_accepted": count - rounds,
+                "acceptance_rate": acceptance_rate(count - rounds, rounds * k),
+            }
         if self.sc.fused:
             toks, okg, _, cache, key = self.decode_segment(nxt, cache, key, max_new - 1)
             jax.block_until_ready(toks)
@@ -596,5 +829,5 @@ class Engine:
             "finite": finite,
             "prefill_s": t_prefill,
             "decode_s": t_decode,
-            "tok_per_s": b * (max_new - 1) / max(t_decode, 1e-9),
+            "tok_per_s": tok_per_s(b * (max_new - 1), t_decode),
         }

@@ -1,0 +1,32 @@
+"""Shared serving-metric definitions.
+
+There is exactly ONE notion of decode throughput in this repo (DESIGN.md
+§13): tokens *accepted* — i.e. actually delivered to the caller — divided by
+decode wall time.  For non-speculative decode every decoded token is
+accepted, so the definition degenerates to the old ``decoded / decode_s``;
+speculative decode *proposes* more tokens than it delivers, and those
+rejected drafts must never inflate a throughput number.  Both
+``Engine.generate`` and ``Scheduler.stats`` report through this helper so
+the two can never drift apart again.
+"""
+
+from __future__ import annotations
+
+__all__ = ["tok_per_s", "acceptance_rate"]
+
+
+def tok_per_s(accepted_tokens: int, decode_s: float) -> float:
+    """Canonical decode throughput: accepted tokens per decode wall second.
+
+    ``accepted_tokens`` counts tokens delivered to the caller beyond the
+    first (prefill-billed) token; ``decode_s`` is decode wall time only —
+    prefill/admission time is accounted separately.
+    """
+    return accepted_tokens / max(decode_s, 1e-9)
+
+
+def acceptance_rate(accepted_drafts: int, proposed_drafts: int) -> float:
+    """Fraction of drafter-proposed tokens the verifier accepted.  NaN when
+    nothing was proposed (non-speculative runs must not read as 0% or
+    100%)."""
+    return accepted_drafts / proposed_drafts if proposed_drafts else float("nan")

@@ -482,7 +482,19 @@ def qdq_lm_params(
 
 
 def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
-    """One-token decode with VUSA-packed weights (dense family only).
+    """Decode step with VUSA-packed weights (dense family only).  ``token``
+    is (B, 1) for normal decode or (B, s) for a speculative multi-token
+    verify (contiguous cache only).  A *fully* packed step (scope="all"
+    with an untied, packed LM head) runs the s-row verify genuinely
+    batched: every matmul goes through the VUSA Pallas appliers, which are
+    row-bitwise across row counts AND ~flat-cost in rows (the grid scans
+    jobs, not rows), and ``attention_decode`` attends per query row — so
+    the batched verify is bit-identical to s sequential steps at roughly
+    single-step cost, which is where the speculative speedup comes from
+    (DESIGN.md §13).  A partial pack (scope="mlp" or tied embeddings)
+    still routes rows through XLA gemms, which are NOT row-stable, so it
+    falls back to chaining s single-token steps inside the one dispatch —
+    same bit-parity argument as :func:`repro.models.families.lm_decode_step`.
 
     ``packed`` is a ``pack_lm_weights`` dict (fused megakernel MLP and,
     with ``scope="all"``, packed attention projections + LM head) or a
@@ -496,6 +508,24 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
     absent or size 1 is the degenerate case — identical program to
     ``mesh=None`` (DESIGN.md §8)."""
     assert cfg.family == "dense", "packed decode path targets the dense family"
+    if token.shape[1] > 1:
+        assert "table" not in cache, (
+            "multi-token decode needs a contiguous cache; gather the paged "
+            "view first (serve/scheduler.py)"
+        )
+        full = (
+            "mlp" in packed
+            and packed.get("attn") is not None
+            and packed.get("head") is not None
+        )
+        if not full:  # partial pack: XLA gemms are not row-stable — chain
+            logits = []
+            for i in range(token.shape[1]):
+                lg, cache = lm_decode_step_packed(
+                    params, packed, token[:, i : i + 1], cache, cfg, mesh=mesh
+                )
+                logits.append(lg)
+            return jnp.concatenate(logits, axis=1), cache
     if "mlp" not in packed:  # legacy flat layout
         packed = {"mlp": packed, "attn": None, "head": None, "fused_mlp": False}
     mlp = packed["mlp"]
@@ -601,4 +631,4 @@ def lm_decode_step_packed(params, packed, token, cache, cfg, mesh=None):
         logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
     if table is not None:
         return logits, {**new_kv, "table": table, "pos": pos + 1}
-    return logits, {**new_kv, "pos": pos + 1}
+    return logits, {**new_kv, "pos": pos + token.shape[1]}

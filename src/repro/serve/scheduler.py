@@ -96,6 +96,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .engine import Engine
+from .metrics import acceptance_rate, tok_per_s
 
 __all__ = ["Request", "Completion", "Scheduler", "Status"]
 
@@ -317,12 +318,28 @@ class Scheduler:
             self._kdata = jax.device_put(
                 self._kdata, batch_sharding(engine.mesh, slots, self._kdata.ndim)
             )
+        # self-speculative decoding (DESIGN.md §13): each scan step of the
+        # segment dispatch becomes one draft/verify ROUND, advancing a slot
+        # by 1..draft_k+1 tokens, so every worst-case KV-growth bound that
+        # used ``segment`` must use ``span = segment * (draft_k + 1)``
+        self.speculative = bool(engine.sc.speculative)
+        self._draft_k = engine.sc.draft_k if self.speculative else 0
+        self._span = segment * (self._draft_k + 1)
         # donate the pool state: segments and admissions update it in place.
         # ``dense`` is static: quarantining the pack flips it, forcing the
         # retrace that rebinds the decode step onto the dense path.
         self._seg = jax.jit(
             self._segment_fn, static_argnums=(4, 5), donate_argnums=(1, 2, 3)
         )
+        if self.speculative:
+            self._seg_spec = jax.jit(
+                self._segment_spec_fn, static_argnums=(4, 5), donate_argnums=(1, 2, 3)
+            )
+            if self.paged:
+                self._seg_spec_paged = jax.jit(
+                    self._segment_spec_paged_fn,
+                    static_argnums=(4, 5), donate_argnums=(1, 2, 3),
+                )
         self._write = jax.jit(self._write_fn, donate_argnums=(0, 1, 2))
         self._write_many = jax.jit(self._write_many_fn, donate_argnums=(0, 1, 2))
         self._derive_keys = jax.jit(
@@ -339,6 +356,9 @@ class Scheduler:
         self._counters: Dict[str, int] = dict(
             rejected=0, shed=0, timed_out=0, cancelled=0,
             fallback=0, failed=0, quarantined=0, preempted=0, stalled=0,
+            # speculative accounting (host-consumed view): drafts proposed in
+            # rounds a slot consumed from, and how many of them were accepted
+            spec_proposed=0, spec_accepted=0,
         )
         # streaming/watchdog state (DESIGN.md §12).  `_abort_status` is the
         # fail-fast flag another thread (the async engine's watchdog) sets:
@@ -418,11 +438,14 @@ class Scheduler:
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         if req.max_new < 1:  # before the budget check: a negative max_new
             raise ValueError("max_new must be >= 1")  # could slip past it
-        budget = prompt.shape[0] + req.max_new + self.segment
+        # worst-case KV rows this request can occupy: a slot decodes whole
+        # segments, and under speculation each segment step is a round that
+        # can write up to draft_k+1 rows (self._span == segment otherwise)
+        budget = prompt.shape[0] + req.max_new + self._span
         if budget > self.eng.sc.max_len:
             raise ValueError(
                 f"prompt({prompt.shape[0]}) + max_new({req.max_new}) + "
-                f"segment({self.segment}) = {budget} exceeds max_len "
+                f"segment span({self._span}) = {budget} exceeds max_len "
                 f"{self.eng.sc.max_len}"
             )
         if self.paged:
@@ -551,11 +574,13 @@ class Scheduler:
         return dict(self._completions)
 
     def itl_samples(self) -> List[float]:
-        """This epoch's per-token inter-token-latency samples.  Tokens are
-        *observable* only at segment syncs, so the k tokens a slot emits at
-        one sync each get ``(sync_gap / k)`` — the mean per-token latency
-        over that segment; followers of the very first token (whose own
-        latency is the TTFT) sample 0.0, they arrived in the same batch."""
+        """This epoch's inter-token-latency samples — one per *emission
+        event*.  Tokens are observable only at segment syncs, so everything
+        a slot emits at one sync surfaces at the same wall-clock instant:
+        that event contributes exactly one ``t - last_emit_t`` interval (see
+        :meth:`_note_emission`), never ``k`` copies of an average.  The
+        first-ever emission sets the baseline and samples nothing — TTFT
+        owns the first token."""
         return list(self._itl)
 
     def refresh_decode(self) -> None:
@@ -572,6 +597,16 @@ class Scheduler:
             self._seg_paged = jax.jit(
                 self._segment_paged_fn, static_argnums=(4, 5), donate_argnums=(1, 2, 3)
             )
+        if self.speculative:
+            self._seg_spec = jax.jit(
+                self._segment_spec_fn, static_argnums=(4, 5), donate_argnums=(1, 2, 3)
+            )
+            if self.paged:
+                self._seg_spec_paged = jax.jit(
+                    self._segment_spec_paged_fn,
+                    static_argnums=(4, 5),
+                    donate_argnums=(1, 2, 3),
+                )
 
     def verify_paged_mirror(self) -> bool:
         """Recovery invariant check (DESIGN.md §12): the host-side block
@@ -675,6 +710,85 @@ class Scheduler:
             body, (token, kdata, pstate), None, length=steps
         )
         return token, kdata, pstate, toks, okg
+
+    def _segment_spec_fn(self, params, token, kdata, cache, steps: int, dense: bool):
+        """Speculative twin of :meth:`_segment_fn` (DESIGN.md §13): each scan
+        step runs one draft/verify ROUND per slot instead of one decode step,
+        so a slot advances by 1..S tokens per step (S = draft_k+1).  Returns
+        per-round grids: tokens (steps, slots, S), accepted counts ``nem``
+        (steps, slots), and per-position integrity flags (steps, slots, S) —
+        the host consumes ``tokens[r, i, :nem[r, i]]`` of each round.  The
+        PRNG key advances once per EMITTED token inside the round, so the
+        surviving key/token stream is bit-identical to :meth:`_segment_fn`'s
+        one-split-per-step stream."""
+        spec = self.eng._spec_round_dense_fn if dense else self.eng._spec_round_fn
+
+        def body(carry, _):
+            token, kdata, cache = carry
+
+            def one(tok, kd, c):
+                pending, c2, kd2, emit, nem, okp = spec(params, tok, c, kd)
+                return pending, kd2, c2, emit, nem, okp
+
+            token, kdata, cache, emit, nem, okp = jax.vmap(one)(token, kdata, cache)
+            return (token, kdata, cache), (emit, nem, okp)
+
+        (token, kdata, cache), (toks, nems, okg) = jax.lax.scan(
+            body, (token, kdata, cache), None, length=steps
+        )
+        return token, kdata, cache, toks, nems, okg
+
+    def _segment_spec_paged_fn(
+        self, params, token, kdata, pstate, steps: int, dense: bool
+    ):
+        """Paged twin of :meth:`_segment_spec_fn`.  A speculative round needs
+        a contiguous multi-token cache, so each slot first gathers its block
+        table into exactly the ``(1, max_len)`` view the slot pool holds
+        (same math as ``attention_decode``'s paged branch — bit-identical
+        tokens), runs the round on it, and hands back the S verifier KV rows
+        it wrote at ``pos..pos+S-1``; the conflict-free scatter into the
+        shared arena happens once per round, outside the slot vmap
+        (:func:`repro.models.cache.paged_scatter_rows`).  Rejected-tail rows
+        are scattered too — they mirror the contiguous pool's
+        stale-but-finite rows, masked past ``pos`` until overwritten."""
+        from ..models.cache import paged_in_axes, paged_scatter_rows, paged_view
+
+        spec = self.eng._spec_round_dense_fn if dense else self.eng._spec_round_fn
+        names = self._arena_names
+        S = self._draft_k + 1
+        max_len = self.eng.sc.max_len
+
+        def body(carry, _):
+            token, kdata, pstate = carry
+            start = pstate["pos"]  # (slots,) round-start positions
+
+            def one(tok, kd, c):
+                pos0 = c["pos"]
+                row = c["table"]
+                contig = {"pos": pos0}
+                for n in names:
+                    a = c[n]  # (L, n_blocks, page, ...) arena leaf (vmap const)
+                    g = a[:, row]  # (L, n_pages, page, ...)
+                    contig[n] = g.reshape(a.shape[0], 1, -1, *a.shape[3:])[
+                        :, :, :max_len
+                    ]
+                pending, c2, kd2, emit, nem, okp = spec(params, tok, contig, kd)
+                rows = {
+                    n + "_new": jax.lax.dynamic_slice_in_dim(c2[n], pos0, S, axis=2)
+                    for n in names
+                }
+                return pending, kd2, rows, emit, nem, okp
+
+            token, kdata, rows, emit, nem, okp = jax.vmap(
+                one, in_axes=(0, 0, paged_in_axes(pstate))
+            )(token, kdata, paged_view(pstate))
+            pstate = paged_scatter_rows(pstate, rows, start, nem)
+            return (token, kdata, pstate), (emit, nem, okp)
+
+        (token, kdata, pstate), (toks, nems, okg) = jax.lax.scan(
+            body, (token, kdata, pstate), None, length=steps
+        )
+        return token, kdata, pstate, toks, nems, okg
 
     # -- jitted paged-pool mutations (all donate the pool state) --------------
 
@@ -1055,7 +1169,9 @@ class Scheduler:
             if not slot.active or slot.prefill is not None:
                 continue
             needed = min(
-                -(-(self._pos[i] + self.segment) // self._layout.page),
+                # span, not segment: a speculative round writes up to
+                # draft_k+1 rows per step (DESIGN.md §13)
+                -(-(self._pos[i] + self._span) // self._layout.page),
                 self._layout.n_pages,
             )
             cur = self._slot_npages[i]
@@ -1266,21 +1382,21 @@ class Scheduler:
         return [(rid, req) for _, rid, req in take]
 
     def _note_emission(self, slot: _Slot, n_before: int, t: float) -> None:
-        """Record ITL samples for tokens slot emitted at this sync.  Segment
-        decoding surfaces k tokens per sync; each of the k gets the same
-        ``sync_gap / k`` sample so the series integrates to wall time.  The
-        stream's first-ever emission sets the baseline instead of sampling
-        (TTFT owns the first token); same-batch followers of the first token
-        sample 0.0.  A ``_fail_slot`` truncation can shrink ``tokens`` below
-        ``n_before`` — that is not an emission."""
+        """Record an ITL sample for this sync's emission event.  Tokens that
+        surface together at one sync were observable at the same wall-clock
+        instant, so the event contributes exactly ONE interval sample —
+        ``t - last_emit_t`` — not ``emitted`` copies of its average, and
+        nothing for same-instant followers (spreading one gap uniformly over
+        a variable 1..k+1 speculative emission would make the percentiles
+        meaningless).  The stream's first-ever emission only sets the
+        baseline (TTFT owns the first token).  A ``_fail_slot`` truncation
+        can shrink ``tokens`` below ``n_before`` — that is not an
+        emission."""
         emitted = (len(slot.tokens) if slot.tokens is not None else 0) - n_before
         if emitted <= 0:
             return
-        if math.isnan(slot.last_emit_t):
-            if emitted > 1:
-                self._itl.extend([0.0] * (emitted - 1))
-        else:
-            self._itl.extend([(t - slot.last_emit_t) / emitted] * emitted)
+        if not math.isnan(slot.last_emit_t):
+            self._itl.append(t - slot.last_emit_t)
         slot.last_emit_t = t
 
     def _retire(self, i: int, now: float, status: Status = Status.OK) -> Completion:
@@ -1410,22 +1526,56 @@ class Scheduler:
                 # come back in the same device_get — the guard costs no
                 # extra host transfer
                 t0 = self._clock()
-                if self.paged:
-                    self._token, self._kdata, self._pstate, toks, okg = self._seg_paged(
-                        self.eng.params, self._token, self._kdata, self._pstate,
-                        self.segment, bool(self.eng.quarantined),
-                    )
+                if self.speculative:
+                    # each scan step is one draft/verify ROUND: grids come
+                    # back S-wide (S = draft_k + 1) with per-round accepted
+                    # counts — the host consumes tokens[r, i, :nem[r, i]]
+                    if self.paged:
+                        (
+                            self._token, self._kdata, self._pstate,
+                            toks, nems, okg,
+                        ) = self._seg_spec_paged(
+                            self.eng.params, self._token, self._kdata,
+                            self._pstate, self.segment,
+                            bool(self.eng.quarantined),
+                        )
+                    else:
+                        (
+                            self._token, self._kdata, self._cache,
+                            toks, nems, okg,
+                        ) = self._seg_spec(
+                            self.eng.params, self._token, self._kdata,
+                            self._cache, self.segment,
+                            bool(self.eng.quarantined),
+                        )
+                    # (segment, slots, S), (segment, slots), (segment, slots, S)
+                    toks_np, nem_np, ok_np = jax.device_get((toks, nems, okg))
                 else:
-                    self._token, self._kdata, self._cache, toks, okg = self._seg(
-                        self.eng.params, self._token, self._kdata, self._cache,
-                        self.segment, bool(self.eng.quarantined),
-                    )
-                toks_np, ok_np = jax.device_get((toks, okg))  # (segment, slots) x2
+                    if self.paged:
+                        self._token, self._kdata, self._pstate, toks, okg = self._seg_paged(
+                            self.eng.params, self._token, self._kdata, self._pstate,
+                            self.segment, bool(self.eng.quarantined),
+                        )
+                    else:
+                        self._token, self._kdata, self._cache, toks, okg = self._seg(
+                            self.eng.params, self._token, self._kdata, self._cache,
+                            self.segment, bool(self.eng.quarantined),
+                        )
+                    toks_np, ok_np = jax.device_get((toks, okg))  # (segment, slots) x2
+                    # present the non-speculative grids as degenerate S=1
+                    # rounds so one consumption loop serves both modes
+                    toks_np = toks_np[:, :, None]
+                    ok_np = ok_np[:, :, None]
+                    nem_np = np.ones(toks_np.shape[:2], np.int64)
                 self._decode_s += self._clock() - t0
                 self._seg_steps += self.segment
                 self._active_slot_steps += len(active_idx) * self.segment
                 if self.paged:
-                    self._pos = [p + self.segment for p in self._pos]
+                    # each slot advanced by its own accepted-token total
+                    # (uniformly ``segment`` when not speculative)
+                    self._pos = [
+                        p + int(nem_np[:, i].sum()) for i, p in enumerate(self._pos)
+                    ]
                 self._kv_active_acc += len(active_idx)
                 self._kv_used_acc += (
                     self._alloc.live_blocks * self._block_bytes
@@ -1463,18 +1613,35 @@ class Scheduler:
                             self._note_emission(slot, n_before, t)
                             self._retire(i, t)
                             continue
-                    for step in range(min(slot.remaining, self.segment)):
-                        if not ok_np[step, i]:
-                            # non-finite logits: every token from this step on
-                            # is garbage — truncate and fail the slot
-                            self._fail_slot(i, t)
+                    stop = False
+                    for step in range(self.segment):
+                        if stop or slot.remaining <= 0:
                             break
-                        tok = toks_np[step, i]
-                        slot.tokens.append(int(tok))
-                        slot.remaining -= 1
-                        if (slot.eos_id is not None and tok == slot.eos_id) or slot.remaining == 0:
-                            self._retire(i, t)
-                            break
+                        used = 0
+                        for j in range(int(nem_np[step, i])):
+                            if not ok_np[step, i, j]:
+                                # non-finite logits: every token from this
+                                # position on is garbage — truncate and fail
+                                self._fail_slot(i, t)
+                                stop = True
+                                break
+                            tok = toks_np[step, i, j]
+                            slot.tokens.append(int(tok))
+                            slot.remaining -= 1
+                            used += 1
+                            if (
+                                slot.eos_id is not None and tok == slot.eos_id
+                            ) or slot.remaining == 0:
+                                self._retire(i, t)
+                                stop = True
+                                break
+                        if self.speculative and used:
+                            # acceptance accounting per consumed round: the
+                            # round proposed draft_k tokens and used-1 of
+                            # them survived verification (the first emission
+                            # is the round's pending token, not a draft)
+                            self._counters["spec_proposed"] += self._draft_k
+                            self._counters["spec_accepted"] += used - 1
                     self._note_emission(slot, n_before, t)
                     slot = self._slot[i]  # may have retired/failed above
                     if slot.active and t > slot.deadline:
@@ -1524,6 +1691,13 @@ class Scheduler:
             "itl_p95_s": pct(itl, 95),
             "itl_p99_s": pct(itl, 99),
             "slot_occupancy": self._active_slot_steps / max(self.slots * self._seg_steps, 1),
+            # unified accounting (DESIGN.md §13): accepted tokens over decode
+            # wall time — the same definition Engine.generate reports, so
+            # speculative and plain runs compare on one axis
+            "tok_per_s": tok_per_s(decoded, self._decode_s),
+            "acceptance_rate": acceptance_rate(
+                self._counters["spec_accepted"], self._counters["spec_proposed"]
+            ),
         }
         # cache observability (DESIGN.md §11) — always present, NaN where the
         # gauge doesn't apply (slot-pool mode, or an epoch with no traffic),

@@ -257,8 +257,35 @@ def test_tune_key_separates_reconstruct_modes():
         autotune_row_packed(x, p, iters=1, slot_chunk=8)
         assert len(_KBLK_CACHE) == 3  # three distinct cache entries
         keys = list(_KBLK_CACHE)
-        assert {k[-2] for k in keys} == {"onehot", "loop"}
-        assert {k[-1] for k in keys} == {8, 24}
+        assert {k[-3] for k in keys} == {"onehot", "loop"}
+        assert {k[-2] for k in keys} == {8, 24}
     finally:
+        _KBLK_CACHE.clear()
+        _KBLK_CACHE.update(before)
+
+
+def test_tune_key_separates_kblk_env():
+    """A k_blk autotuned without REPRO_VUSA_KBLK must not be served after the
+    override changes mid-process (and vice versa): the env value is part of
+    the cache key — the seed's key omitted it, so a pre-override entry
+    silently shadowed an explicit operator override."""
+    rng = np.random.default_rng(6)
+    p = pack_linear_rows(_sparse(rng, 64, 128, 0.85), a=8)
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    before = dict(_KBLK_CACHE)
+    assert "REPRO_VUSA_KBLK" not in os.environ
+    try:
+        _KBLK_CACHE.clear()
+        autotune_row_packed(x, p, iters=1)
+        assert len(_KBLK_CACHE) == 1
+        os.environ["REPRO_VUSA_KBLK"] = "16"
+        autotune_row_packed(x, p, iters=1)
+        assert len(_KBLK_CACHE) == 2, (
+            "the env override must key its own autotune entry, not reuse "
+            "the pre-override one"
+        )
+        assert {k[-1] for k in _KBLK_CACHE} == {"", "16"}
+    finally:
+        del os.environ["REPRO_VUSA_KBLK"]
         _KBLK_CACHE.clear()
         _KBLK_CACHE.update(before)

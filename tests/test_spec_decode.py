@@ -1,0 +1,367 @@
+"""Self-speculative decoding via sparsity tiers (DESIGN.md §13).
+
+Parity is the contract: greedy speculative decode must be token-bit-identical
+to non-speculative decode in every serve mode (dense, whole-model packed,
+int8 values, slot-pool and paged scheduling), because the verifier re-derives
+every emitted token on the exact non-speculative path.  The multi-token
+verify dispatch is covered at the unit level too — the dense chain and the
+packed batched path must reproduce sequential single-token steps bitwise.
+
+Also here: the latency-accounting regressions this PR fixed — ITL percentile
+samples are per emission *event* (one interval per sync, however many tokens
+surfaced together), proven with an injected deterministic clock.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.pruning import prune_tree
+from repro.models import build_model
+from repro.serve import Engine, FaultConfig, Request, Scheduler, ServeConfig, Status
+from repro.serve.packed import lm_decode_step_packed, pack_lm_weights
+
+
+def _tiered(params, detail=0.03):
+    """Weights with the tier structure the drafter exploits (the paper's
+    unstructured-sparsity regime): a dense core (top 1% of magnitudes), a
+    low-magnitude detail tier (next 14%, scaled by ``detail``), zeros
+    elsewhere.  A 99%-sparsity magnitude prune keeps exactly the core, so
+    the drafter agrees with the verifier on most greedy argmaxes."""
+
+    def leaf(w):
+        w = np.asarray(w)
+        if w.ndim < 2:
+            return w
+        a = np.abs(w)
+        srt = np.sort(a.ravel())[::-1]
+        t1 = srt[max(int(0.01 * a.size) - 1, 0)]
+        t2 = srt[max(int(0.15 * a.size) - 1, 0)]
+        return np.where(a >= t1, w, np.where(a >= t2, w * detail, 0.0)).astype(w.dtype)
+
+    return jax.tree_util.tree_map(leaf, params)
+
+
+@pytest.fixture(scope="module")
+def vusa():
+    cfg = get_smoke_config("vusa_edge")
+    return cfg, build_model(cfg).init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def vusa_tiered(vusa):
+    cfg, params = vusa
+    return cfg, _tiered(params)
+
+
+@pytest.fixture(scope="module")
+def vusa_pruned(vusa):
+    cfg, params = vusa
+    return cfg, prune_tree(params, 0.85)
+
+
+def _prompt(seed=0, n=6, lo=1, hi=100):
+    return np.random.default_rng(seed).integers(lo, hi, (1, n)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# multi-token verify dispatch: bitwise vs sequential single-token steps
+# ---------------------------------------------------------------------------
+
+
+def test_multitoken_dense_chain_bitwise(vusa):
+    """families.lm_decode_step with an (1, S) token runs as a chain of exact
+    single-token steps inside one dispatch — logits and KV bitwise equal to
+    S sequential calls, under jit (XLA gemms are not row-stable across row
+    counts, which is why the dense path chains instead of batching)."""
+    cfg, params = vusa
+    model = build_model(cfg)
+    rng = np.random.default_rng(1)
+    toks = rng.integers(1, cfg.vocab, (1, 5)).astype(np.int32)
+
+    multi = jax.jit(model.decode_step)
+    lg_m, c_m = multi(params, toks, model.init_cache(1, 16))
+    single = jax.jit(model.decode_step)
+    c_s = model.init_cache(1, 16)
+    parts = []
+    for i in range(toks.shape[1]):
+        lg, c_s = single(params, toks[:, i : i + 1], c_s)
+        parts.append(np.asarray(lg))
+    np.testing.assert_array_equal(np.asarray(lg_m), np.concatenate(parts, axis=1))
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(c_m[name]), np.asarray(c_s[name]))
+    assert int(c_m["pos"]) == toks.shape[1]
+
+
+def test_multitoken_packed_batched_bitwise(vusa_pruned):
+    """lm_decode_step_packed with a FULL pack (scope='all', untied head)
+    genuinely batches the S rows through the Pallas appliers — which, unlike
+    XLA gemms, are row-bitwise across row counts — so the batched verify
+    must equal S sequential packed steps bit for bit, under jit."""
+    cfg, params = vusa_pruned
+    assert not cfg.tie_embeddings  # full pack needs the untied head
+    model = build_model(cfg)
+    packed = pack_lm_weights(cfg, params, scope="all")
+    rng = np.random.default_rng(2)
+    toks = rng.integers(1, cfg.vocab, (1, 4)).astype(np.int32)
+
+    step = jax.jit(
+        lambda p, t, c: lm_decode_step_packed(p, packed, t, c, cfg)
+    )
+    lg_m, c_m = step(params, toks, model.init_cache(1, 16))
+    c_s = model.init_cache(1, 16)
+    parts = []
+    for i in range(toks.shape[1]):
+        lg, c_s = step(params, toks[:, i : i + 1], c_s)
+        parts.append(np.asarray(lg))
+    np.testing.assert_array_equal(np.asarray(lg_m), np.concatenate(parts, axis=1))
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(c_m[name]), np.asarray(c_s[name]))
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: speculative generate == non-speculative generate
+# ---------------------------------------------------------------------------
+
+
+def _pair(cfg, params, temp, mode, **spec_kw):
+    """(base, speculative) engines for one serve mode; identical seeds."""
+    base_sc = ServeConfig(
+        max_len=96,
+        temperature=temp,
+        packed_weights=False if mode == "dense" else "all",
+        packed_values="int8" if mode == "int8" else "bf16",
+    )
+    spec_sc = dataclasses.replace(
+        base_sc,
+        **{"speculative": True, "draft_k": 4, "draft_sparsity": 0.99, **spec_kw},
+    )
+    return (
+        Engine(cfg, params, base_sc),
+        Engine(cfg, params, spec_sc),
+    )
+
+
+@pytest.mark.parametrize("temp", [0.0, 1.0])
+@pytest.mark.parametrize("mode", ["dense", "all", "int8"])
+def test_generate_spec_parity(vusa_tiered, temp, mode):
+    """Speculative generate must be token-bit-identical to the plain fused
+    loop — greedy AND sampled (the PRNG key advances once per emitted token,
+    exactly the non-speculative split sequence), dense, whole-model packed
+    and int8-valued packs alike."""
+    cfg, params = vusa_tiered
+    base, spec = _pair(cfg, params, temp, mode)
+    prompt = _prompt(3)
+    want = base.generate(prompt, max_new=24)
+    got = spec.generate(prompt, max_new=24)
+    np.testing.assert_array_equal(got["tokens"], want["tokens"])
+    assert got["spec_rounds"] >= 1
+    assert got["spec_proposed"] == got["spec_rounds"] * 4
+    assert 0.0 <= got["acceptance_rate"] <= 1.0
+
+
+def test_k1_degenerate(vusa_tiered):
+    """draft_k=1 is the smallest legal draft: one drafted token per round,
+    still bit-identical, still at least one emission per round."""
+    cfg, params = vusa_tiered
+    base, spec = _pair(cfg, params, 0.0, "all", draft_k=1)
+    prompt = _prompt(4)
+    want = base.generate(prompt, max_new=16)["tokens"]
+    got = spec.generate(prompt, max_new=16)
+    np.testing.assert_array_equal(got["tokens"], want)
+    assert got["spec_rounds"] <= 15  # every round emits >= 1 token
+
+
+def test_all_accept_when_drafter_is_verifier(vusa_pruned):
+    """draft_sparsity=0 packs the verifier's own weights as the drafter —
+    every greedy draft must be accepted (acceptance exactly 1.0) and each
+    round must emit the full k+1 tokens."""
+    cfg, params = vusa_pruned
+    base, spec = _pair(cfg, params, 0.0, "all", draft_sparsity=0.0)
+    prompt = _prompt(5)
+    want = base.generate(prompt, max_new=21)["tokens"]
+    got = spec.generate(prompt, max_new=21)
+    np.testing.assert_array_equal(got["tokens"], want)
+    assert got["acceptance_rate"] == 1.0
+    assert got["spec_rounds"] == 4  # 20 decode tokens / (k+1)=5 per round
+
+
+def test_mostly_reject_still_bit_identical(vusa_pruned):
+    """Random-init magnitude tiers carry no structure, so a 99%-sparsity
+    drafter is mostly wrong — acceptance collapses but the output is STILL
+    bit-identical: rejection costs speed, never correctness."""
+    cfg, params = vusa_pruned
+    base, spec = _pair(cfg, params, 0.0, "all")
+    prompt = _prompt(6)
+    want = base.generate(prompt, max_new=20)["tokens"]
+    got = spec.generate(prompt, max_new=20)
+    np.testing.assert_array_equal(got["tokens"], want)
+    assert got["acceptance_rate"] <= 0.3
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: spec rounds through the fused segment scan
+# ---------------------------------------------------------------------------
+
+
+def _reqs(n=5, seed=0, max_new=10, **kw):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(1, 100, 6).astype(np.int32), max_new=max_new,
+                seed=i, **kw)
+        for i in range(n)
+    ]
+
+
+def _spec_sc(**kw):
+    return ServeConfig(
+        max_len=160, packed_weights="all",
+        speculative=True, draft_k=4, draft_sparsity=0.99, **kw
+    )
+
+
+def test_scheduler_spec_parity_slot_pool(vusa_tiered):
+    """Speculative continuous batching over the slot pool: every completion
+    bit-identical to the non-speculative scheduler, and the acceptance
+    counters live in stats()."""
+    cfg, params = vusa_tiered
+    base_sc = ServeConfig(max_len=160, packed_weights="all")
+    want = Scheduler(Engine(cfg, params, base_sc), slots=4, segment=3).run(_reqs())
+    sched = Scheduler(Engine(cfg, params, _spec_sc()), slots=4, segment=3)
+    got = sched.run(_reqs())
+    assert set(got) == set(want)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid].tokens, want[rid].tokens)
+    st = sched.stats()
+    assert st["spec_proposed"] > 0
+    assert 0.0 < st["acceptance_rate"] <= 1.0
+    assert st["tok_per_s"] > 0
+
+
+def test_scheduler_spec_parity_paged(vusa_tiered):
+    """Paged twin: each slot gathers its block view, runs the round, and the
+    verifier rows scatter back through paged_scatter_rows — tokens must stay
+    bit-identical to the slot-pool speculative run (hence to non-spec)."""
+    cfg, params = vusa_tiered
+    want = Scheduler(Engine(cfg, params, _spec_sc()), slots=4, segment=3).run(_reqs())
+    sched = Scheduler(
+        Engine(cfg, params, _spec_sc(page_size=16)), slots=4, segment=3
+    )
+    got = sched.run(_reqs())
+    assert set(got) == set(want)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid].tokens, want[rid].tokens)
+    assert sched.verify_paged_mirror()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("page", [0, 16])
+def test_scheduler_spec_parity_sampled(vusa_tiered, page):
+    """Sampled speculative serving (temperature 1.0): greedy drafts almost
+    never match the sampled stream, so this is the all-reject regime at
+    scheduler scale — parity must hold anyway, in both pool modes."""
+    cfg, params = vusa_tiered
+    base_sc = ServeConfig(max_len=160, packed_weights="all", temperature=1.0)
+    want = Scheduler(Engine(cfg, params, base_sc), slots=4, segment=3).run(_reqs())
+    sched = Scheduler(
+        Engine(cfg, params, _spec_sc(temperature=1.0, page_size=page)),
+        slots=4, segment=3,
+    )
+    got = sched.run(_reqs())
+    for rid in want:
+        np.testing.assert_array_equal(got[rid].tokens, want[rid].tokens)
+
+
+def test_eos_mid_draft_stops_stream(vusa_tiered):
+    """EOS landing mid-round: the host consumes the round's tokens in order
+    and retires at the first EOS — nothing past it may leak into the
+    completion, and the stream matches the non-speculative EOS run."""
+    cfg, params = vusa_tiered
+    # find a token the greedy stream actually emits, away from position 0,
+    # so EOS falls inside a speculative round's accepted window
+    probe = Engine(cfg, params, ServeConfig(max_len=160, packed_weights="all"))
+    stream = probe.generate(_prompt(7), max_new=12)["tokens"][0]
+    eos = int(stream[5])
+    req = lambda: [Request(prompt=_prompt(7)[0], max_new=12, seed=0, eos_id=eos)]
+    base_sc = ServeConfig(max_len=160, packed_weights="all")
+    want = Scheduler(Engine(cfg, params, base_sc), slots=2, segment=3).run(req())
+    got = Scheduler(Engine(cfg, params, _spec_sc()), slots=2, segment=3).run(req())
+    np.testing.assert_array_equal(got[0].tokens, want[0].tokens)
+    toks = np.asarray(got[0].tokens)
+    hits = np.flatnonzero(toks == eos)
+    assert hits.size >= 1 and hits[0] == len(toks) - 1, (
+        "tokens past the first EOS leaked out of a speculative round"
+    )
+
+
+def test_spec_quarantine_falls_back_dense(vusa_pruned):
+    """NaN corruption in the verifier pack under speculative serving: the
+    pack quarantines, rounds continue with the dense verifier (drafter keeps
+    its own validated pack), and every request finishes FAILED_FALLBACK_OK
+    bit-identical to a clean dense run."""
+    cfg, params = vusa_pruned
+    sc = _spec_sc(faults=FaultConfig(seed=0, pack_value_nans=2))
+    eng = Engine(cfg, params, sc)
+    assert eng.packed_active
+    sched = Scheduler(eng, slots=3, segment=3)
+    done = sched.run(_reqs(3, seed=2))
+    assert eng.quarantined and not eng.packed_active
+    dense_sc = ServeConfig(max_len=160)
+    clean = Scheduler(
+        Engine(cfg, params, dense_sc), slots=3, segment=3
+    ).run(_reqs(3, seed=2))
+    for rid, c in done.items():
+        assert c.status is Status.FAILED_FALLBACK_OK, (rid, c.status)
+        np.testing.assert_array_equal(c.tokens, clean[rid].tokens, err_msg=f"rid {rid}")
+    st = sched.stats()
+    assert st["quarantined"] == 1 and st["failed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# ITL accounting (the latency bugfix this feature depends on)
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+
+@pytest.mark.parametrize("speculative", [False, True])
+def test_itl_one_sample_per_emission_event(vusa_tiered, speculative):
+    """Tokens surface only at segment syncs, so each sync's emission is ONE
+    observable event: with an injected clock that advances exactly 1.0 s per
+    sync, every ITL sample must be exactly 1.0 — the seed recorded k copies
+    of (gap / k) per sync (fabricating sub-second percentiles out of a
+    1-second cadence), and under speculation k varies per round, which made
+    the fabricated percentiles meaningless."""
+    cfg, params = vusa_tiered
+    sc = _spec_sc() if speculative else ServeConfig(max_len=160, packed_weights="all")
+    clk = _FakeClock()
+    # speculative rounds emit up to draft_k+1 tokens per sync — segment=1
+    # keeps the 12-token stream spanning several syncs in both modes
+    sched = Scheduler(
+        Engine(cfg, params, sc), slots=1, segment=1 if speculative else 3,
+        clock=clk, sleep=clk.sleep,
+    )
+    for r in _reqs(1, max_new=12):
+        sched.submit(r)
+    done = sched.run(on_sync=lambda s: clk.sleep(1.0))
+    assert len(done[0].tokens) == 12
+    samples = sched.itl_samples()
+    assert samples, "a multi-sync stream must contribute interval samples"
+    assert set(samples) == {1.0}, (
+        f"per-emission-event sampling must yield whole sync gaps, got {samples}"
+    )
+    st = sched.stats()
+    assert st["itl_p50_s"] == 1.0 and st["itl_p99_s"] == 1.0

@@ -128,7 +128,10 @@ def test_async_streaming_matches_blocking_run(mk_engine, ref_tokens):
     eng, ref = mk_engine("dense"), ref_tokens("dense")
 
     async def go():
-        sched = Scheduler(eng, slots=3)
+        # segment < max_new so every stream spans >1 sync and therefore has
+        # at least one real inter-emission interval — ITL samples observed
+        # gaps only (§13), so a stream that surfaces whole reads NaN
+        sched = Scheduler(eng, slots=3, segment=4)
         async with AsyncEngine(sched) as engine:
             streams = [engine.submit(r) for r in mk_reqs(6)]
             outs = [await _consume(s) for s in streams]
@@ -172,7 +175,7 @@ def test_stats_nan_safe_on_empty():
 def test_scheduler_stats_have_p99_and_itl(mk_engine, ref_tokens):
     eng = mk_engine("dense")
     ref_tokens("dense")  # ensure at least one run's warmup happened
-    sched = Scheduler(eng, slots=2)
+    sched = Scheduler(eng, slots=2, segment=4)
     for r in mk_reqs(3):
         sched.submit(r)
     sched.run()
@@ -180,10 +183,11 @@ def test_scheduler_stats_have_p99_and_itl(mk_engine, ref_tokens):
     for k in ("latency_p99_s", "ttft_p99_s", "itl_p50_s", "itl_p95_s", "itl_p99_s"):
         assert k in st and np.isfinite(st[k])
     assert st["ttft_p50_s"] <= st["ttft_p99_s"]
-    # every token after a stream's first carries exactly one ITL sample
-    # (the first token's own latency is the TTFT, not an ITL)
-    total = sum(len(c.tokens) for c in sched._completions.values())
-    assert len(sched.itl_samples()) == total - len(sched._completions)
+    # every emission EVENT after a stream's first carries exactly one ITL
+    # sample (tokens surfacing together at one sync share a wall-clock
+    # instant; the first event's latency is the TTFT, not an ITL) — here
+    # each 8-token stream surfaces as two 4-token syncs, so one sample each
+    assert len(sched.itl_samples()) == len(sched._completions)
 
 
 # ---------------------------------------------------------------------------
